@@ -1,0 +1,87 @@
+"""Render the §Dry-run / §Roofline tables for EXPERIMENTS.md from
+experiments/dryrun/*.json.
+
+Run: PYTHONPATH=src python -m benchmarks.roofline_table [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+DRY = os.path.join(HERE, "..", "experiments", "dryrun")
+
+ARCH_ORDER = ["mistral-nemo-12b", "falcon-mamba-7b", "recurrentgemma-9b",
+              "yi-6b", "phi-3-vision-4.2b", "whisper-large-v3",
+              "smollm-135m", "llama4-scout-17b-a16e", "deepseek-v2-236b",
+              "qwen3-32b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str, tag: str = ""):
+    out = {}
+    suffix = f"__{tag}" if tag else ""
+    for p in glob.glob(os.path.join(DRY, f"*__{mesh}{suffix}.json")):
+        base = os.path.basename(p)[:-5]
+        parts = base.split("__")
+        if tag and (len(parts) < 4 or parts[3] != tag):
+            continue
+        if not tag and len(parts) != 3:
+            continue
+        rec = json.load(open(p))
+        out[(rec["arch"], rec["shape"])] = rec
+    return out
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.1f}"
+
+
+def render(mesh: str, tag: str = "") -> str:
+    recs = load(mesh, tag)
+    lines = [
+        f"### Roofline — {mesh} mesh"
+        + (f" [{tag}]" if tag else "")
+        + " (per step; ms on TPU v5e terms)",
+        "",
+        "| arch | shape | compute | memory | collective | dominant |"
+        " useful FLOP ratio | note |",
+        "|---|---|---:|---:|---:|---|---:|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            rec = recs.get((arch, shape))
+            if rec is None:
+                lines.append(f"| {arch} | {shape} | - | - | - | MISSING | |")
+                continue
+            if rec["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | — | — | — | skipped |"
+                             f" | {rec['reason'][:60]} |")
+                continue
+            if rec["status"] == "error":
+                lines.append(f"| {arch} | {shape} | - | - | - | ERROR | |"
+                             f" {rec['error'][:60]} |")
+                continue
+            r = rec["roofline"]
+            fb = len(rec.get("fallbacks", []))
+            note = f"{fb} repl-fallbacks" if fb else ""
+            lines.append(
+                f"| {arch} | {shape} | {fmt_ms(r['compute_s'])} |"
+                f" {fmt_ms(r['memory_s'])} | {fmt_ms(r['collective_s'])} |"
+                f" {r['dominant']} | {r['useful_flops_ratio']:.2f} |"
+                f" {note} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    print(render(args.mesh, args.tag))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Quickstart: a 4-hospital federation with disjoint modalities on CPU.
+
+Each node holds ONE private modality (image / text / genetics / tabular);
+the public anchor set + Gram/CKA alignment pulls their latent geometries
+together while GeoLoRA keeps the per-round uplink low-rank-sized.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs import get_config
+from repro.core.federation import Federation, FederationConfig
+
+
+def main():
+    model = get_config("fedmm-small").with_(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, dtype="float32")
+    fed = FederationConfig(
+        n_nodes=4,
+        modalities=("image", "text", "genetics", "tabular"),
+        method="geodora",             # Eq. 5: direction shared, magnitude local
+        aggregation="precision",      # Eq. 6: LAP-weighted server averaging
+        rounds=4, local_steps=8, local_batch=32, lambda_geo=1.0)
+    print(f"federation: {fed.n_nodes} nodes, one modality each, "
+          f"method={fed.method}")
+    f = Federation(fed, model)
+    for r in range(fed.rounds):
+        rec = f.run_round()
+        print(f"round {r}: task={rec['task_loss']:.3f} "
+              f"acc={rec['acc']:.2f} geo={rec['geo_loss']:.4f} "
+              f"cross-modality CKA={rec['cross_node_cka']:.3f} "
+              f"uplink={rec['uplink_bytes']/1e6:.3f}MB "
+              f"({100*(1-rec['uplink_bytes']/rec['full_model_bytes']):.1f}% "
+              f"below full-model FedAvg)")
+    print("\nNodes never exchanged samples or activations — only "
+          "B_k/m_k side-cars and 32x32 anchor Gram matrices.")
+
+
+if __name__ == "__main__":
+    main()

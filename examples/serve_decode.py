@@ -1,0 +1,61 @@
+"""Serving example: prefill a batch of requests, then batched decode with
+arch-appropriate caches (ring-buffer SWA, MLA latents, SSM states).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch falcon-mamba-7b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-32b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    b, s = args.batch, args.prompt_len
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            key, (b, cfg.n_image_tokens, cfg.image_embed_dim))
+    if cfg.family == "audio":
+        batch["enc_embeds"] = jax.random.normal(
+            key, (b, cfg.encoder_seq_len, cfg.encoder_embed_dim))
+
+    t0 = time.time()
+    logits, cache = jax.jit(
+        lambda p, bt: T.prefill(p, bt, cfg,
+                                cache_len=s + cfg.n_image_tokens
+                                + args.new_tokens + 8))(params, batch)
+    print(f"prefill {b}x{s} [{cfg.family}] in {time.time()-t0:.1f}s "
+          f"(cache leaves: {len(jax.tree.leaves(cache))})")
+
+    decode = jax.jit(lambda p, c, t: T.decode_step(p, c, {"tokens": t}, cfg))
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for _ in range(args.new_tokens):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    dt = (time.time() - t0) / args.new_tokens
+    toks = jnp.concatenate(out, axis=1)
+    print(f"decoded {args.new_tokens} tokens/seq @ {dt*1e3:.0f} ms/step "
+          f"(greedy): {toks[0, :12].tolist()}...")
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    print("ok: finite logits, cache len =", int(cache["len"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""End-to-end driver: federated GeoDoRA fine-tuning of a language model.
+
+Default runs a CPU-sized config for a few rounds; pass --full to train the
+~100M fedmm-small for a few hundred steps (slow on CPU, sized for a real
+accelerator), or --arch to pick any assigned architecture (reduced).
+
+    PYTHONPATH=src python examples/train_federated_lm.py
+    PYTHONPATH=src python examples/train_federated_lm.py --full
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params, 25 rounds x 8 local steps")
+    ap.add_argument("--arch", default="fedmm-small")
+    args = ap.parse_args()
+    if args.full:
+        train_main(["--arch", args.arch, "--rounds", "25",
+                    "--local-steps", "8", "--batch", "8", "--seq", "512",
+                    "--method", "geodora"])
+    else:
+        train_main(["--arch", args.arch, "--tiny", "--rounds", "3",
+                    "--local-steps", "4", "--batch", "4", "--seq", "128",
+                    "--method", "geodora"])
+
+
+if __name__ == "__main__":
+    main()

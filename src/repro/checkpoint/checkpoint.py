@@ -1,0 +1,75 @@
+"""Pytree checkpointing (numpy .npz + json treedef; no orbax in env).
+
+Handles arbitrary nested dict/list/tuple pytrees with array or scalar
+leaves, bf16 included (stored via uint16 view).  Atomic write (tmp +
+rename) so a crashed save never corrupts the previous checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16 = "bfloat16"
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out = {}
+    metas = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            out[f"leaf_{i}"] = arr.view(np.uint16)
+            metas.append(_BF16)
+        else:
+            out[f"leaf_{i}"] = arr
+            metas.append(str(arr.dtype))
+    return out, (treedef, metas)
+
+
+def save_checkpoint(path: str, tree, step: int = 0) -> None:
+    arrays, (treedef, metas) = _flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    meta = {"treedef": str(treedef), "dtypes": metas, "step": step,
+            "n_leaves": len(metas)}
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp")
+    os.close(fd)
+    try:
+        np.savez(tmp, __meta__=json.dumps(meta), **arrays)
+        src = tmp if tmp.endswith(".npz") else tmp + ".npz"
+        if not os.path.exists(src):      # np.savez appends .npz
+            src = tmp
+        os.replace(src, path)
+    finally:
+        for f in (tmp, tmp + ".npz"):
+            if os.path.exists(f):
+                os.remove(f)
+
+
+def load_checkpoint(path: str, like) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    with np.load(path, allow_pickle=False) as data:
+        meta = json.loads(str(data["__meta__"]))
+        leaves_like, treedef = jax.tree_util.tree_flatten(like)
+        if len(leaves_like) != meta["n_leaves"]:
+            raise ValueError(
+                f"checkpoint has {meta['n_leaves']} leaves, target structure "
+                f"has {len(leaves_like)}")
+        out = []
+        for i, (ref_leaf, dt) in enumerate(zip(leaves_like, meta["dtypes"])):
+            arr = data[f"leaf_{i}"]
+            if dt == _BF16:
+                arr = arr.view(jnp.bfloat16)
+            leaf = jnp.asarray(arr)
+            if hasattr(ref_leaf, "shape") and leaf.shape != ref_leaf.shape:
+                raise ValueError(f"leaf {i}: shape {leaf.shape} != "
+                                 f"{ref_leaf.shape}")
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out), meta["step"]

@@ -1,0 +1,128 @@
+"""Config registry: ``get_config(arch_id)`` and smoke-test ``reduced()`` variants."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import (
+    INPUT_SHAPES,
+    InputShape,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    RGLRUConfig,
+    SSMConfig,
+)
+
+from repro.configs import (  # noqa: E402
+    deepseek_v2_236b,
+    falcon_mamba_7b,
+    fedmm_base,
+    llama4_scout_17b_a16e,
+    mistral_nemo_12b,
+    phi_3_vision_4_2b,
+    qwen3_32b,
+    recurrentgemma_9b,
+    smollm_135m,
+    whisper_large_v3,
+    yi_6b,
+)
+
+ASSIGNED_ARCHS = (
+    "mistral-nemo-12b",
+    "falcon-mamba-7b",
+    "recurrentgemma-9b",
+    "yi-6b",
+    "phi-3-vision-4.2b",
+    "whisper-large-v3",
+    "smollm-135m",
+    "llama4-scout-17b-a16e",
+    "deepseek-v2-236b",
+    "qwen3-32b",
+)
+
+_REGISTRY = {
+    c.arch_id: c
+    for c in (
+        mistral_nemo_12b.CONFIG,
+        falcon_mamba_7b.CONFIG,
+        recurrentgemma_9b.CONFIG,
+        yi_6b.CONFIG,
+        phi_3_vision_4_2b.CONFIG,
+        whisper_large_v3.CONFIG,
+        smollm_135m.CONFIG,
+        llama4_scout_17b_a16e.CONFIG,
+        deepseek_v2_236b.CONFIG,
+        qwen3_32b.CONFIG,
+        fedmm_base.CONFIG,
+        fedmm_base.SMALL,
+    )
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]
+
+
+def list_archs() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """CPU smoke-test variant of the same family: <=2 layers, d_model<=512,
+    <=4 experts, small vocab/context — per the brief."""
+    kw = dict(
+        n_layers=2,
+        d_model=256,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads else 0,
+        head_dim=64,
+        d_ff=512 if cfg.d_ff else 0,
+        vocab_size=512,
+        max_seq_len=256,
+        dtype="float32",
+    )
+    if cfg.family == "ssm":
+        kw.update(n_heads=0, n_kv_heads=0, d_ff=0)
+        kw["ssm"] = dataclasses.replace(cfg.ssm, chunk=16)
+    if cfg.family == "hybrid":
+        kw["n_layers"] = 3  # one full (recurrent, recurrent, attention) group
+        kw["n_kv_heads"] = 1
+        kw["rglru"] = dataclasses.replace(
+            cfg.rglru, lru_width=256, local_window=64, chunk=16)
+    if cfg.family == "moe":
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=4, top_k=min(cfg.moe.top_k, 2),
+            num_shared_experts=min(cfg.moe.num_shared_experts, 1),
+            d_ff_expert=256)
+        kw["d_ff"] = 256
+    if cfg.mla is not None:
+        kw["mla"] = MLAConfig(kv_lora_rank=64,
+                              q_lora_rank=48 if cfg.mla.q_lora_rank else 0,
+                              rope_head_dim=32, nope_head_dim=64, v_head_dim=64)
+    if cfg.family == "audio":
+        kw.update(n_encoder_layers=2, encoder_seq_len=32, encoder_embed_dim=256,
+                  max_seq_len=64)
+    if cfg.family == "vlm":
+        kw.update(n_image_tokens=8, image_embed_dim=64)
+    if cfg.sliding_window:
+        kw["sliding_window"] = 64
+    if cfg.attention_chunk:
+        kw["attention_chunk"] = 64
+    return cfg.with_(**kw)
+
+
+__all__ = [
+    "ASSIGNED_ARCHS",
+    "INPUT_SHAPES",
+    "InputShape",
+    "MLAConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "RGLRUConfig",
+    "SSMConfig",
+    "get_config",
+    "list_archs",
+    "reduced",
+]

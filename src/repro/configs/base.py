@@ -1,0 +1,181 @@
+"""Model / run configuration dataclasses.
+
+Every assigned architecture gets one module in this package defining a
+``ModelConfig`` with the exact published hyperparameters (citation in
+``source``).  ``reduced()`` produces the CPU smoke-test variant of the same
+family (<=2 layers, d_model<=512, <=4 experts) mandated by the brief.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0          # routed experts
+    top_k: int = 1
+    num_shared_experts: int = 0   # always-on experts
+    d_ff_expert: int = 0          # per-expert hidden dim
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+    load_balance_loss: float = 1e-2
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 multi-head latent attention dims [arXiv:2405.04434]."""
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0          # 0 => full-rank q projection
+    rope_head_dim: int = 64       # decoupled rope key dim
+    nope_head_dim: int = 128      # per-head non-rope dim
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-1 block dims [arXiv:2312.00752 / falcon-mamba arXiv:2410.05355]."""
+    state_dim: int = 16
+    conv_kernel: int = 4
+    expand: int = 2               # d_inner = expand * d_model
+    dt_rank: int = 0              # 0 => ceil(d_model/16)
+    chunk: int = 128              # chunked associative scan length
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """RecurrentGemma RG-LRU dims [arXiv:2402.19427]."""
+    lru_width: int = 0            # 0 => d_model
+    conv_kernel: int = 4
+    block_pattern: Tuple[str, ...] = ("recurrent", "recurrent", "attention")
+    local_window: int = 2048
+    chunk: int = 128
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    source: str                   # citation
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    max_seq_len: int = 131072
+    rope_theta: float = 1e6
+    qk_norm: bool = False
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    # attention variants
+    sliding_window: int = 0       # 0 => full attention; >0 => SWA width
+    attention_chunk: int = 0      # llama4-style chunked local attention
+    # family extensions
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    # enc-dec (audio)
+    n_encoder_layers: int = 0
+    encoder_seq_len: int = 0      # frames after the (stubbed) conv frontend
+    encoder_embed_dim: int = 0    # stub frontend output dim
+    # vlm
+    n_image_tokens: int = 0       # patch embeds prepended to the text sequence
+    image_embed_dim: int = 0      # stub vision-encoder output dim
+    # notes for DESIGN.md / dry-run skips
+    long_context_variant: str = ""  # how long_500k decode is supported
+    skip_shapes: Tuple[str, ...] = ()
+
+    # ------------------------------------------------------------------
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def d_head_total(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def param_count(self) -> int:
+        """Analytic total parameter count (embedding + blocks + head)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        emb = v * d + (0 if self.tie_embeddings else v * d)
+        per_layer = 0
+        if self.family in ("dense", "vlm"):
+            per_layer = self._attn_params() + 3 * d * f + 2 * d
+        elif self.family == "moe":
+            m = self.moe
+            dense_ff = 3 * d * m.d_ff_expert * m.num_shared_experts
+            expert_ff = 3 * d * m.d_ff_expert * m.num_experts
+            router = d * m.num_experts
+            per_layer = self._attn_params() + dense_ff + expert_ff + router + 2 * d
+        elif self.family == "ssm":
+            s = self.ssm
+            di = s.expand * d
+            dtr = s.dt_rank or -(-d // 16)
+            per_layer = (2 * d * di + di * s.conv_kernel
+                         + di * (dtr + 2 * s.state_dim) + dtr * di
+                         + di * s.state_dim + di + di * d + d)
+        elif self.family == "hybrid":
+            r = self.rglru
+            w = r.lru_width or d
+            rec = 2 * d * w + 2 * w * r.conv_kernel + 2 * w * w // 1 + w * d
+            att = self._attn_params()
+            pat = r.block_pattern
+            n_rec = sum(1 for i in range(self.n_layers) if pat[i % len(pat)] == "recurrent")
+            n_att = self.n_layers - n_rec
+            per_layer = 0  # handled below
+            blocks = n_rec * (rec + 3 * d * f + 2 * d) + n_att * (att + 3 * d * f + 2 * d)
+            return emb + blocks + d
+        elif self.family == "audio":
+            enc = self.n_encoder_layers * (self._attn_params() + 2 * d * f + 2 * d)
+            dec = self.n_layers * (2 * self._attn_params() + 2 * d * f + 3 * d)
+            return emb + enc + dec + 2 * d
+        return emb + self.n_layers * per_layer + d
+
+    def _attn_params(self) -> int:
+        d = self.d_model
+        if self.mla is not None:
+            m = self.mla
+            qd = (d * self.n_heads * (m.nope_head_dim + m.rope_head_dim)
+                  if m.q_lora_rank == 0 else
+                  d * m.q_lora_rank + m.q_lora_rank * self.n_heads * (m.nope_head_dim + m.rope_head_dim))
+            kvd = d * (m.kv_lora_rank + m.rope_head_dim)
+            kvu = m.kv_lora_rank * self.n_heads * (m.nope_head_dim + m.v_head_dim)
+            o = self.n_heads * m.v_head_dim * d
+            return qd + kvd + kvu + o
+        q = d * self.n_heads * self.head_dim
+        kv = 2 * d * self.n_kv_heads * self.head_dim
+        o = self.n_heads * self.head_dim * d
+        return q + kv + o
+
+    @property
+    def active_param_count(self) -> int:
+        """Active params per token (= param_count for non-MoE)."""
+        if self.family != "moe":
+            return self.param_count
+        m = self.moe
+        d = self.d_model
+        inactive = 3 * d * m.d_ff_expert * (m.num_experts - m.top_k) * self.n_layers
+        return self.param_count - inactive
+
+
+# ----------------------------------------------------------------------
+# Assigned input shapes (fixed across architectures).
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}

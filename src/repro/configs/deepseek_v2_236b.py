@@ -1,0 +1,24 @@
+"""DeepSeek-V2 236B (MLA kv_lora=512, 2 shared + 160 routed experts top-6)
+[arXiv:2405.04434]."""
+from repro.configs.base import ModelConfig, MLAConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    arch_id="deepseek-v2-236b",
+    family="moe",
+    source="arXiv:2405.04434 (DeepSeek-V2)",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,               # MLA: all heads read the shared latent KV
+    d_ff=1536,                    # per-expert hidden dim
+    vocab_size=102400,
+    head_dim=128,
+    max_seq_len=131072,
+    rope_theta=1e4,
+    mla=MLAConfig(kv_lora_rank=512, q_lora_rank=1536, rope_head_dim=64,
+                  nope_head_dim=128, v_head_dim=128),
+    moe=MoEConfig(num_experts=160, top_k=6, num_shared_experts=2,
+                  d_ff_expert=1536, capacity_factor=1.25),
+    long_context_variant="native-ish: MLA compressed KV cache (576 B/token "
+                         "bf16) keeps 500k decode cache at ~604 MB",
+)

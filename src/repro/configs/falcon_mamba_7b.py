@@ -1,0 +1,17 @@
+"""Falcon-Mamba-7B (attention-free Mamba-1 SSM) [arXiv:2410.05355]."""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    arch_id="falcon-mamba-7b",
+    family="ssm",
+    source="arXiv:2410.05355 (Falcon Mamba); block per arXiv:2312.00752 (Mamba-1)",
+    n_layers=64,
+    d_model=4096,
+    n_heads=0,                    # attention-free
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=65024,
+    max_seq_len=1 << 20,
+    ssm=SSMConfig(state_dim=16, conv_kernel=4, expand=2, chunk=128),
+    long_context_variant="native: constant-size SSM state, O(1) decode memory",
+)

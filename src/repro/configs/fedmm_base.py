@@ -1,0 +1,45 @@
+"""The paper's own global homogeneous multimodal transformer.
+
+The paper initializes the global model from a pretrained VLM backbone; we use
+a llama-style dense decoder at ~0.4B scale ("fedmm-base") as the federation's
+global model, plus a ~100M "fedmm-small" used by the end-to-end training
+example.  Modality tokenizer dims follow the paper's choices (DINOv3 /
+DNABERT / TabPFN / Llama as frozen featurizers — stubbed per DESIGN.md).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="fedmm-base",
+    family="dense",
+    source="this paper (global homogeneous transformer, VLM-init scale)",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=2816,
+    vocab_size=32768,
+    head_dim=64,
+    max_seq_len=4096,
+    rope_theta=1e4,
+    long_context_variant="sliding-window(8192) decode variant",
+)
+
+SMALL = CONFIG.with_(
+    arch_id="fedmm-small",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=4,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=16384,
+)
+
+# Frozen per-modality tokenizer output dims (the paper's phi_m); stub values
+# follow the real tokenizers' embedding widths.
+MODALITY_TOKENIZER_DIMS = {
+    "image": 1024,     # DINOv3 ViT-L [arXiv:2508.10104]
+    "text": 2048,      # Llama small variant [arXiv:2302.13971]
+    "genetics": 768,   # DNABERT [Bioinformatics 37(15)]
+    "tabular": 192,    # TabPFN feature embeddings [Nature 637]
+}

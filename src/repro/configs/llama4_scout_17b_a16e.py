@@ -1,0 +1,22 @@
+"""Llama-4-Scout-17B-16E (MoE, 16 routed experts top-1 + 1 shared, early fusion)
+[hf:meta-llama/Llama-4-Scout-17B-16E]."""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    arch_id="llama4-scout-17b-a16e",
+    family="moe",
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,                    # per-expert hidden dim
+    vocab_size=202048,
+    head_dim=128,
+    max_seq_len=1 << 20,          # 10M advertised; 1M here
+    rope_theta=5e5,
+    attention_chunk=8192,         # llama4 chunked local attention (iRoPE)
+    moe=MoEConfig(num_experts=16, top_k=1, num_shared_experts=1,
+                  d_ff_expert=8192, capacity_factor=1.25),
+    long_context_variant="native: chunked local attention (8192) per model card",
+)

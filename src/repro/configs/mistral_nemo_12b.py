@@ -1,0 +1,19 @@
+"""Mistral-Nemo-Base-2407 (12B dense, GQA) [hf:mistralai/Mistral-Nemo-Base-2407]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="mistral-nemo-12b",
+    family="dense",
+    source="hf:mistralai/Mistral-Nemo-Base-2407",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=131072,
+    head_dim=128,
+    max_seq_len=131072,           # 128k context
+    rope_theta=1e6,
+    long_context_variant="sliding-window(8192) decode variant for long_500k "
+                         "(paper config is full attention; flagged in DESIGN.md)",
+)

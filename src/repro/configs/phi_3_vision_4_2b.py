@@ -1,0 +1,28 @@
+"""Phi-3-Vision-128k (phi3-mini backbone + CLIP frontend stub)
+[hf:microsoft/Phi-3-vision-128k-instruct].
+
+Per the brief, only the transformer backbone is implemented; the CLIP ViT
+vision encoder is a stub — ``input_specs()`` supplies precomputed patch
+embeddings (image_embed_dim=1024, CLIP ViT-L/14) which the trainable
+projector (the paper's adapter W_mk) maps into d_model.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="phi-3-vision-4.2b",
+    family="vlm",
+    source="hf:microsoft/Phi-3-vision-128k-instruct",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,                # MHA (kv=32)
+    d_ff=8192,
+    vocab_size=32064,
+    head_dim=96,                  # 32 * 96 = 3072
+    max_seq_len=131072,
+    rope_theta=1e4,
+    n_image_tokens=576,           # 24x24 CLIP patch grid
+    image_embed_dim=1024,
+    long_context_variant="sliding-window(8192) decode variant for long_500k "
+                         "(flagged in DESIGN.md)",
+)

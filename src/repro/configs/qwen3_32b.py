@@ -1,0 +1,20 @@
+"""Qwen3-32B (dense GQA with qk_norm) [hf:Qwen/Qwen3-8B family card]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen3-32b",
+    family="dense",
+    source="hf:Qwen/Qwen3-8B (qwen3 family; 32B dims per assignment)",
+    n_layers=64,
+    d_model=5120,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=25600,
+    vocab_size=151936,
+    head_dim=128,
+    max_seq_len=131072,
+    rope_theta=1e6,
+    qk_norm=True,
+    long_context_variant="sliding-window(8192) decode variant for long_500k "
+                         "(flagged in DESIGN.md)",
+)

@@ -1,0 +1,21 @@
+"""RecurrentGemma-9B (RG-LRU + local attention hybrid, 2:1) [arXiv:2402.19427]."""
+from repro.configs.base import ModelConfig, RGLRUConfig
+
+CONFIG = ModelConfig(
+    arch_id="recurrentgemma-9b",
+    family="hybrid",
+    source="arXiv:2402.19427 (Griffin/RecurrentGemma)",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,                 # GQA kv=1 (MQA) in the local-attention blocks
+    d_ff=12288,
+    vocab_size=256000,
+    head_dim=256,                 # 16 heads * 256 = 4096
+    max_seq_len=1 << 20,
+    rope_theta=1e4,
+    rglru=RGLRUConfig(lru_width=4096, conv_kernel=4,
+                      block_pattern=("recurrent", "recurrent", "attention"),
+                      local_window=2048, chunk=128),
+    long_context_variant="native: RG-LRU state + local attention window 2048",
+)

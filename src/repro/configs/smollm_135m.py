@@ -1,0 +1,20 @@
+"""SmolLM-135M (llama-architecture small dense) [hf:HuggingFaceTB/SmolLM-135M]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="smollm-135m",
+    family="dense",
+    source="hf:HuggingFaceTB/SmolLM-135M",
+    n_layers=30,
+    d_model=576,
+    n_heads=9,
+    n_kv_heads=3,
+    d_ff=1536,
+    vocab_size=49152,
+    head_dim=64,                  # 9 * 64 = 576
+    max_seq_len=2048,
+    rope_theta=1e4,
+    tie_embeddings=True,
+    long_context_variant="sliding-window(8192) decode variant for long_500k "
+                         "(flagged in DESIGN.md)",
+)

@@ -1,0 +1,31 @@
+"""Whisper-large-v3 (encoder-decoder audio) [arXiv:2212.04356].
+
+The mel-spectrogram + conv frontend is a stub — ``input_specs()`` supplies
+precomputed frame embeddings (1500 frames, d=1280) fed to the encoder stack.
+Vocab padded 51866 -> 51872 (multiple of 32) for clean vocab sharding; the
+original size is recorded here.
+"""
+from repro.configs.base import ModelConfig
+
+ORIGINAL_VOCAB = 51866
+
+CONFIG = ModelConfig(
+    arch_id="whisper-large-v3",
+    family="audio",
+    source="arXiv:2212.04356 (Whisper); large-v3 card",
+    n_layers=32,                  # decoder layers (encoder: n_encoder_layers)
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,                # MHA
+    d_ff=5120,
+    vocab_size=51872,             # padded from 51866 for sharding
+    head_dim=64,                  # 20 * 64 = 1280
+    max_seq_len=448,
+    rope_theta=0.0,               # whisper uses learned/sinusoidal positions
+    n_encoder_layers=32,
+    encoder_seq_len=1500,
+    encoder_embed_dim=1280,
+    skip_shapes=("long_500k",),   # enc-dec audio: no 500k decode regime (DESIGN.md)
+    long_context_variant="skipped: encoder-decoder audio model (1500-frame "
+                         "encoder, ~448-token decoder)",
+)

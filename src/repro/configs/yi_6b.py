@@ -1,0 +1,19 @@
+"""Yi-6B (llama-architecture dense, GQA) [arXiv:2403.04652]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="yi-6b",
+    family="dense",
+    source="arXiv:2403.04652 (Yi)",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=11008,
+    vocab_size=64000,
+    head_dim=128,
+    max_seq_len=4096,
+    rope_theta=5e6,
+    long_context_variant="sliding-window(8192) decode variant for long_500k "
+                         "(flagged in DESIGN.md)",
+)

@@ -1,0 +1,55 @@
+"""Server-side aggregation: FedAvg, GeoLoRA B-averaging (Eq. 4) and GeoDoRA
+magnitude/direction averaging (Eq. 5), with optional precision weights.
+
+Because ``lora_A`` is frozen and identical across nodes, averaging the
+``lora_B`` factors is *exactly* equivalent to averaging the full low-rank
+updates:  mean_k(B_k) @ A == mean_k(B_k @ A)  — the property that makes
+Eq. 4 sound (and that heterogeneous-A schemes like FedIT get wrong, see
+paper Table 2).  Property-tested in tests/test_properties.py.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def weighted_mean_trees(trees: Sequence, weights: Optional[Array] = None):
+    """Weighted average of pytrees (FedAvg core). ``weights`` sums to 1."""
+    k = len(trees)
+    if weights is None:
+        weights = jnp.full((k,), 1.0 / k, jnp.float32)
+
+    def avg(*leaves):
+        acc = jnp.zeros_like(leaves[0], dtype=jnp.float32)
+        for w, leaf in zip(weights, leaves):
+            acc = acc + w * leaf.astype(jnp.float32)
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *trees)
+
+
+def fedavg(node_updates: Sequence, weights: Optional[Array] = None):
+    """Plain FedAvg [McMahan 2017] — the paper's baseline aggregator."""
+    return weighted_mean_trees(node_updates, weights)
+
+
+def aggregate_geolora(node_trainables: Sequence,
+                      weights: Optional[Array] = None):
+    """Eq. 4 (+5): average the node-trainable side-car trees (lora_B,
+    dora_m, shared heads).  With DoRA side-cars present this realises Eq. 5:
+    the averaged magnitude multiplies the direction
+    (theta_fixed + mean(B) A) / ||...||_c at apply time (see
+    ``repro.models.common.linear``), so averaging (B_k, m_k) is the whole
+    server step."""
+    return weighted_mean_trees(node_trainables, weights)
+
+
+def comm_bytes_per_round(trainable_tree, gram_side: int = 0) -> int:
+    """Uplink bytes a node ships per round under the paper's protocol:
+    the trainable side-cars + the B x B Gram matrix (f32)."""
+    from repro.core.lora import param_bytes
+    return param_bytes(trainable_tree) + gram_side * gram_side * 4

@@ -1,0 +1,417 @@
+"""Federated rounds for unpaired multimodal data — the paper's protocol.
+
+Per round, each node k (one modality each, strictly private data):
+  1. runs local AdamW steps on  L_task + lambda * (1 - CKA(G_k, G_bar))
+     (Eq. 3), where only the GeoLoRA ``lora_B`` / GeoDoRA ``dora_m`` /
+     shared-head params and the LOCAL adapter W_mk are trainable;
+     under GeoDoRA the geometric loss sees ``stop_gradient(dora_m)`` so it
+     constrains *direction only* (paper: "R_geo applied exclusively to D");
+  2. computes its public-anchor Gram matrix G_k (Eq. 1) and its LAP
+     precision p_k (Eq. 6) — the ONLY things uploaded besides the side-cars;
+  3. the server averages Grams into G_bar, computes precision weights, and
+     precision-weight-averages the shipped side-cars (Eqs. 4-5), then
+     broadcasts.
+
+Adapters W_mk never leave the node; the frozen base theta is never
+communicated after initialisation.  Communication per round is measured and
+compared against full-model FedAvg in the benchmarks (paper claim: >99.9%
+reduction).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, get_config
+from repro.core import aggregation as agg
+from repro.core import cka as cka_mod
+from repro.core import lora as lora_mod
+from repro.core import uncertainty as unc
+from repro.data.synthetic import SyntheticMultimodal
+from repro.data.tokenizers import FrozenTokenizer, default_tokenizers
+from repro.models import transformer as T
+from repro.models.common import cross_entropy_loss, linear, make_linear
+from repro.optim.adamw import AdamW
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class FederationConfig:
+    n_nodes: int = 4
+    modalities: Tuple[str, ...] = ("image", "text", "genetics", "tabular")
+    method: str = "geolora"            # geolora | geodora | fedavg_full
+    aggregation: str = "precision"     # precision | uniform
+    lora_rank: int = 8
+    lambda_geo: float = 1.0
+    rounds: int = 5
+    local_steps: int = 10
+    local_batch: int = 32
+    lr: float = 3e-3
+    n_classes: int = 8
+    anchors_per_class: int = 4
+    n_tokens: int = 16
+    corrupt_nodes: Tuple[int, ...] = ()
+    # bridge clients (paper's hybrid federation): nodes holding locally
+    # PAIRED data across two modalities add an intra-node contrastive loss,
+    # rigidifying the global manifold alignment.
+    bridge_nodes: Tuple[int, ...] = ()
+    bridge_modality: str = "text"            # second modality on bridges
+    lambda_bridge: float = 0.5
+    # nodes whose anchor modality is MISSING from the public set and is
+    # replaced by noisy synthetic anchors (digital twins); the paper claims
+    # LAP naturally downweights them via the distributional shift.
+    synthetic_anchor_nodes: Tuple[int, ...] = ()
+    synthetic_anchor_noise: float = 2.0
+    seed: int = 0
+    center_cka: bool = False
+
+
+def _stopgrad_named(tree, names=("dora_m",)):
+    def walk(node, name):
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, name) for v in node)
+        if node is None:
+            return None
+        return jax.lax.stop_gradient(node) if name in names else node
+    return walk(tree, "")
+
+
+def _shipped_mask(trainable):
+    """True for side-cars shipped to the server (lora_B/dora_m/cls_head),
+    False for node-local params (adapter W_mk)."""
+    def walk(node, name, local):
+        local = local or name in lora_mod.LOCAL_SUBTREES
+        if isinstance(node, dict):
+            return {k: walk(v, k, local) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, name, local) for v in node)
+        if node is None:
+            return None
+        return not local
+    return walk(trainable, "", False)
+
+
+def _split_by_mask(tree, mask):
+    a = jax.tree.map(lambda p, m: p if (p is not None and m) else None,
+                     tree, mask, is_leaf=lambda x: x is None)
+    b = jax.tree.map(lambda p, m: p if (p is not None and not m) else None,
+                     tree, mask, is_leaf=lambda x: x is None)
+    return a, b
+
+
+def _merge_by_mask(shipped, local, mask):
+    return jax.tree.map(
+        lambda m, s, l: s if m else l, mask, shipped, local,
+        is_leaf=lambda x: x is None)
+
+
+class Federation:
+    """Simulated federation (K nodes on one host). The multi-pod SPMD
+    mapping of the same protocol lives in repro.launch."""
+
+    def __init__(self, fed: FederationConfig, model: ModelConfig = None):
+        self.fed = fed
+        self.cfg = model or get_config("fedmm-small")
+        key = jax.random.PRNGKey(fed.seed)
+        k_model, k_data, k_anchor, k_lora, k_nodes = jax.random.split(key, 5)
+
+        # ---- substrate: task, tokenizers, anchors ----
+        from repro.configs.fedmm_base import MODALITY_TOKENIZER_DIMS
+        self.task = SyntheticMultimodal(n_classes=fed.n_classes,
+                                        modalities=fed.modalities,
+                                        seed=fed.seed)
+        self.tokenizers = default_tokenizers(
+            {m: MODALITY_TOKENIZER_DIMS[m] for m in fed.modalities},
+            self.task.d_raw, fed.n_tokens, seed=fed.seed)
+        anchors_raw = self.task.anchor_set(k_anchor, fed.anchors_per_class)
+        # pre-tokenize public anchors once per modality (tokenizers frozen)
+        self.anchor_tokens = {m: self.tokenizers[m](anchors_raw[m][0])
+                              for m in fed.modalities}
+        # synthetic (generated) anchors: same class structure, heavy noise
+        self.synthetic_anchor_tokens = {}
+        if fed.synthetic_anchor_nodes:
+            kn = jax.random.fold_in(k_anchor, 777)
+            for m, (raw, _) in anchors_raw.items():
+                noisy = raw + fed.synthetic_anchor_noise * \
+                    jax.random.normal(jax.random.fold_in(
+                        kn, hash(m) % (2 ** 31)), raw.shape)
+                self.synthetic_anchor_tokens[m] = self.tokenizers[m](noisy)
+
+        # ---- global model (the paper's VLM-initialised homogeneous
+        # transformer; random init here — protocol math is init-agnostic) ----
+        params = T.init_params(k_model, self.cfg)
+        if fed.method in ("geolora", "geodora"):
+            spec = lora_mod.LoRASpec(rank=fed.lora_rank,
+                                     dora=(fed.method == "geodora"))
+            params = lora_mod.attach_lora(k_lora, params, spec)
+        kh = jax.random.fold_in(k_model, 99)
+        params["cls_head"] = make_linear(kh, self.cfg.d_model, fed.n_classes,
+                                         jnp.float32)
+
+        if fed.method == "fedavg_full":
+            mask = jax.tree.map(lambda _: True, params)
+        else:
+            mask = lora_mod.trainable_mask(params)
+        self.mask = mask
+        trainable, self.frozen = lora_mod.partition(params, mask)
+
+        # ---- per-node state: shared trainables + local adapter ----
+        self.node_modality = [fed.modalities[i % len(fed.modalities)]
+                              for i in range(fed.n_nodes)]
+        self.opt = AdamW(lr=fed.lr, weight_decay=0.0, grad_clip=1.0)
+        self.nodes = []
+        for i in range(fed.n_nodes):
+            m = self.node_modality[i]
+            ka = jax.random.fold_in(k_nodes, i)
+            node_train = dict(trainable)
+            node_train["adapter"] = make_linear(
+                ka, self.tokenizers[m].d_out, self.cfg.d_model, jnp.float32)
+            self.nodes.append({
+                "trainable": node_train,
+                "opt_state": self.opt.init(node_train),
+                "modality": m,
+                "corrupt": i in fed.corrupt_nodes,
+                "bridge": i in fed.bridge_nodes,
+                "key": jax.random.fold_in(k_data, i),
+            })
+        # bridge clients get a second local adapter for the paired modality
+        for node in self.nodes:
+            if node["bridge"]:
+                m2 = fed.bridge_modality
+                if m2 == node["modality"]:
+                    m2 = next(m for m in fed.modalities
+                              if m != node["modality"])
+                node["modality2"] = m2
+                ka2 = jax.random.fold_in(k_nodes, 1000 + self.nodes.index(node))
+                node["trainable"]["adapter2"] = make_linear(
+                    ka2, self.tokenizers[m2].d_out, self.cfg.d_model,
+                    jnp.float32)
+                node["opt_state"] = self.opt.init(node["trainable"])
+        # frozen tree needs structure-matching adapter placeholders
+        self.frozen = dict(self.frozen)
+        self.frozen["adapter"] = {"w": None}
+        self.mask = dict(self.mask)
+        self.mask["adapter"] = {"w": True}
+        if any(n.get("bridge") for n in self.nodes):
+            self.frozen_bridge = dict(self.frozen, adapter2={"w": None})
+        else:
+            self.frozen_bridge = None
+
+        self.gbar = self._initial_consensus()
+        self.history: List[dict] = []
+
+    # ------------------------------------------------------------------
+    def _pooled(self, params, tokens) -> Array:
+        embeds = linear(tokens.astype(jnp.float32), params["adapter"])
+        _, aux = T.forward(params, {"inputs_embeds": embeds}, self.cfg)
+        return aux["pooled"]
+
+    def _frozen_for(self, node) -> dict:
+        return self.frozen_bridge if node.get("bridge") else self.frozen
+
+    def _initial_consensus(self) -> Array:
+        grams = []
+        for node in self.nodes:
+            params = lora_mod.combine(node["trainable"],
+                                      self._frozen_for(node))
+            pooled = self._pooled(params, self.anchor_tokens[node["modality"]])
+            grams.append(cka_mod.cosine_gram(pooled))
+        return cka_mod.consensus_gram(jnp.stack(grams))
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _contrastive(z1: Array, z2: Array, tau: float = 0.2) -> Array:
+        """Intra-node InfoNCE on locally PAIRED samples (bridge clients)."""
+        z1 = z1 / jnp.maximum(jnp.linalg.norm(z1, axis=-1, keepdims=True),
+                              1e-8)
+        z2 = z2 / jnp.maximum(jnp.linalg.norm(z2, axis=-1, keepdims=True),
+                              1e-8)
+        sim = (z1 @ z2.T) / tau
+        labels = jnp.arange(z1.shape[0])
+        return 0.5 * (cross_entropy_loss(sim, labels)
+                      + cross_entropy_loss(sim.T, labels))
+
+    @functools.partial(jax.jit, static_argnums=(0,))
+    def _local_step(self, trainable, opt_state, frozen, batch_tokens, labels,
+                    anchor_tokens, gbar):
+        lam = self.fed.lambda_geo
+
+        def loss_fn(train):
+            params = lora_mod.combine(train, frozen)
+            pooled = self._pooled(params, batch_tokens)
+            logits = linear(pooled, params["cls_head"])
+            task = cross_entropy_loss(logits, labels)
+            # GeoDoRA: geometric loss constrains direction only
+            params_geo = lora_mod.combine(_stopgrad_named(train), frozen)
+            pooled_a = self._pooled(params_geo, anchor_tokens)
+            geo = cka_mod.geo_alignment_loss(pooled_a, gbar,
+                                             center=self.fed.center_cka)
+            acc = (logits.argmax(-1) == labels).mean()
+            return task + lam * geo, (task, geo, acc, pooled, pooled_a)
+
+        grads, (task, geo, acc, pooled, pooled_a) = \
+            jax.grad(loss_fn, has_aux=True)(trainable)
+        new_train, new_opt = self.opt.update(grads, opt_state, trainable)
+        return new_train, new_opt, {"task": task, "geo": geo, "acc": acc,
+                                    "pooled": pooled, "pooled_a": pooled_a}
+
+    @functools.partial(jax.jit, static_argnums=(0,))
+    def _bridge_step(self, trainable, opt_state, frozen, batch_tokens,
+                     batch_tokens2, labels, anchor_tokens, gbar):
+        """Local step on a bridge client: task + geo + paired contrastive
+        between the two local modalities (paper: 'bridge clients ...
+        rigidify the global manifold alignment')."""
+        lam, lam_b = self.fed.lambda_geo, self.fed.lambda_bridge
+
+        def loss_fn(train):
+            params = lora_mod.combine(train, frozen)
+            pooled = self._pooled(params, batch_tokens)
+            params2 = dict(params, adapter=params["adapter2"])
+            pooled2 = self._pooled(params2, batch_tokens2)
+            logits = linear(pooled, params["cls_head"])
+            task = cross_entropy_loss(logits, labels)
+            contrast = self._contrastive(pooled, pooled2)
+            params_geo = lora_mod.combine(_stopgrad_named(train), frozen)
+            pooled_a = self._pooled(params_geo, anchor_tokens)
+            geo = cka_mod.geo_alignment_loss(pooled_a, gbar,
+                                             center=self.fed.center_cka)
+            acc = (logits.argmax(-1) == labels).mean()
+            return task + lam * geo + lam_b * contrast, \
+                (task, geo, acc, pooled, pooled_a)
+
+        grads, (task, geo, acc, pooled, pooled_a) = \
+            jax.grad(loss_fn, has_aux=True)(trainable)
+        new_train, new_opt = self.opt.update(grads, opt_state, trainable)
+        return new_train, new_opt, {"task": task, "geo": geo, "acc": acc,
+                                    "pooled": pooled, "pooled_a": pooled_a}
+
+    # ------------------------------------------------------------------
+    def run_round(self) -> dict:
+        fed = self.fed
+        grams, precisions, shipped_list = [], [], []
+        metrics = {"task": [], "geo": [], "acc": []}
+        for i, node in enumerate(self.nodes):
+            m = node["modality"]
+            anchors = (self.synthetic_anchor_tokens[m]
+                       if i in fed.synthetic_anchor_nodes
+                       else self.anchor_tokens[m])
+            last = None
+            for s in range(fed.local_steps):
+                node["key"], kb = jax.random.split(node["key"])
+                raw, labels = self.task.sample(kb, m, fed.local_batch,
+                                               corrupt=node["corrupt"])
+                tokens = self.tokenizers[m](raw)
+                if node.get("bridge"):
+                    # locally paired: same latent draws through modality 2
+                    m2 = node["modality2"]
+                    raw2, _ = self.task.sample(kb, m2, fed.local_batch)
+                    tokens2 = self.tokenizers[m2](raw2)
+                    node["trainable"], node["opt_state"], last = \
+                        self._bridge_step(
+                            node["trainable"], node["opt_state"],
+                            self.frozen_bridge, tokens, tokens2, labels,
+                            anchors, self.gbar)
+                else:
+                    node["trainable"], node["opt_state"], last = \
+                        self._local_step(
+                            node["trainable"], node["opt_state"],
+                            self.frozen, tokens, labels, anchors, self.gbar)
+            metrics["task"].append(float(last["task"]))
+            metrics["geo"].append(float(last["geo"]))
+            metrics["acc"].append(float(last["acc"]))
+            # upload: Gram + precision + shipped side-cars
+            grams.append(cka_mod.cosine_gram(last["pooled_a"]))
+            u = unc.lap_uncertainty(last["pooled"], last["pooled_a"])
+            precisions.append(unc.node_precision(u))
+            smask = _shipped_mask(node["trainable"])
+            shipped, _ = _split_by_mask(node["trainable"], smask)
+            # bridge nodes carry extra local-only keys (adapter2) that are
+            # all-None in the shipped view — drop for structural uniformity
+            shipped = {k: v for k, v in shipped.items()
+                       if any(l is not None for l in jax.tree.leaves(
+                           v, is_leaf=lambda x: x is None))}
+            shipped_list.append(shipped)
+            node["_smask"] = smask
+
+        # ---- server ----
+        grams = jnp.stack(grams)
+        self.gbar = cka_mod.consensus_gram(grams)
+        if fed.aggregation == "precision":
+            weights = unc.precision_weights(jnp.stack(precisions))
+        else:
+            weights = jnp.full((fed.n_nodes,), 1.0 / fed.n_nodes)
+        avg_shipped = agg.aggregate_geolora(shipped_list, weights)
+        for node in self.nodes:
+            merged = dict(avg_shipped)
+            for k in node["trainable"]:
+                if k not in merged:
+                    merged[k] = jax.tree.map(lambda _: None,
+                                             node["trainable"][k])
+            node["trainable"] = _merge_by_mask(merged, node["trainable"],
+                                               node["_smask"])
+
+        pair_cka = cka_mod.pairwise_cka(grams, center=fed.center_cka)
+        off_diag = (pair_cka.sum() - jnp.trace(pair_cka)) \
+            / max(fed.n_nodes * (fed.n_nodes - 1), 1)
+        shipped_bytes = agg.comm_bytes_per_round(
+            shipped_list[0], gram_side=self.gbar.shape[0])
+        full_bytes = lora_mod.param_bytes(
+            lora_mod.combine(self.nodes[0]["trainable"],
+                             self._frozen_for(self.nodes[0])))
+        rec = {
+            "task_loss": sum(metrics["task"]) / fed.n_nodes,
+            "geo_loss": sum(metrics["geo"]) / fed.n_nodes,
+            "acc": sum(metrics["acc"]) / fed.n_nodes,
+            "cross_node_cka": float(off_diag),
+            "weights": [float(w) for w in weights],
+            "uplink_bytes": int(shipped_bytes),
+            "full_model_bytes": int(full_bytes),
+        }
+        self.history.append(rec)
+        return rec
+
+    def run(self) -> List[dict]:
+        for _ in range(self.fed.rounds):
+            self.run_round()
+        return self.history
+
+    # ------------------------------------------------------------------
+    # checkpointing: the server checkpoint is (consensus Gram + per-node
+    # trainables + opt states) — the frozen base/tokenizers are rebuilt
+    # deterministically from the config seed.
+    def save(self, path: str) -> None:
+        from repro.checkpoint import save_checkpoint
+        state = {
+            "gbar": self.gbar,
+            "nodes": [{"trainable": n["trainable"],
+                       "opt_state": n["opt_state"],
+                       "key": n["key"]} for n in self.nodes],
+        }
+        save_checkpoint(path, state, step=len(self.history))
+
+    def restore(self, path: str) -> int:
+        from repro.checkpoint import load_checkpoint
+        like = {
+            "gbar": self.gbar,
+            "nodes": [{"trainable": n["trainable"],
+                       "opt_state": n["opt_state"],
+                       "key": n["key"]} for n in self.nodes],
+        }
+        state, step = load_checkpoint(path, like)
+        self.gbar = state["gbar"]
+        for node, saved in zip(self.nodes, state["nodes"]):
+            node["trainable"] = saved["trainable"]
+            node["opt_state"] = saved["opt_state"]
+            node["key"] = saved["key"]
+        return step
+
+    def node_params(self, i: int) -> dict:
+        return lora_mod.combine(self.nodes[i]["trainable"],
+                                self._frozen_for(self.nodes[i]))

@@ -1,0 +1,141 @@
+"""GeoLoRA / GeoDoRA parameter management (paper Eqs. 3-5).
+
+GeoLoRA: every targeted linear gets side-cars ``lora_A`` (Gaussian, FROZEN,
+identical on every node — eliminating the B@A rotation ambiguity that makes
+naive federated LoRA averaging inconsistent, paper Eq. 4) and ``lora_B``
+(zero-init, trainable, the only thing communicated).
+
+GeoDoRA additionally adds ``dora_m`` (column-magnitude vector): direction is
+aggregated and geometrically aligned, magnitude absorbs local domain shift
+(paper Eq. 5).
+
+This module is backbone-agnostic: it works by traversing any model pytree
+and augmenting linears by name, so the paper's technique attaches to every
+assigned architecture.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import add_dora, add_lora
+
+# Default targets: attention projections (present in every attention arch) +
+# the mixer in/out projections of SSM / RG-LRU blocks.
+DEFAULT_TARGETS = ("wq", "wk", "wv", "wo", "in_proj", "out_proj",
+                   "in_rec", "out", "wq_b", "w_dkv", "w_ukv")
+# Node-local trainable leaf names / subtree names (paper: W_mk adapters stay
+# local; lora_B and dora_m are trained and shipped).
+TRAINABLE_LEAVES = ("lora_B", "dora_m")
+LOCAL_SUBTREES = ("adapter", "adapter2", "enc_adapter")
+SHARED_SUBTREES = ("cls_head",)          # small heads trained + averaged
+
+
+@dataclass(frozen=True)
+class LoRASpec:
+    rank: int = 16
+    targets: Tuple[str, ...] = DEFAULT_TARGETS
+    dora: bool = False
+    scale: float = 1.0
+    a_std: float = 1.0
+
+
+def _is_linear(node) -> bool:
+    return isinstance(node, dict) and "w" in node and hasattr(node["w"], "ndim")
+
+
+def attach_lora(key, params: dict, spec: LoRASpec) -> dict:
+    """Return a copy of ``params`` with GeoLoRA (+GeoDoRA) side-cars attached
+    to every linear whose name is in ``spec.targets``. Works on stacked
+    (scan-over-layers) leaves: side-cars get the same leading layer dims."""
+    counter = [0]
+
+    def walk(node, name):
+        if _is_linear(node):
+            if name in spec.targets and node["w"].ndim >= 2:
+                counter[0] += 1
+                sub = jax.random.fold_in(key, counter[0])
+                new = add_lora(sub, node, spec.rank, node["w"].dtype,
+                               a_std=spec.a_std)
+                if spec.dora:
+                    new = add_dora(new)
+                return new
+            return node
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, name) for v in node)
+        return node
+
+    return walk(params, "")
+
+
+# ----------------------------------------------------------------------
+# trainable/frozen partition
+def trainable_mask(params, extra_subtrees: Tuple[str, ...] = ()) -> dict:
+    """Bool pytree: True where the leaf is node-trainable under the paper's
+    protocol (lora_B, dora_m, adapters, small shared heads)."""
+    marked = LOCAL_SUBTREES + SHARED_SUBTREES + tuple(extra_subtrees)
+
+    def walk(node, name, inside):
+        inside = inside or name in marked
+        if isinstance(node, dict):
+            return {k: walk(v, k, inside) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, name, inside) for v in node)
+        return bool(inside or name in TRAINABLE_LEAVES)
+
+    return walk(params, "", False)
+
+
+def partition(params, mask):
+    """Split params into (trainable, frozen) trees with None placeholders."""
+    train = jax.tree.map(lambda p, m: p if m else None, params, mask,
+                         is_leaf=lambda x: x is None)
+    frozen = jax.tree.map(lambda p, m: None if m else p, params, mask,
+                          is_leaf=lambda x: x is None)
+    return train, frozen
+
+
+def combine(train, frozen):
+    return jax.tree.map(lambda t, f: t if f is None else f, train, frozen,
+                        is_leaf=lambda x: x is None)
+
+
+def count_params(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree) if hasattr(x, "size"))
+
+
+def param_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)
+               if hasattr(x, "size"))
+
+
+# ----------------------------------------------------------------------
+def merge_lora(params: dict, scale: float = 1.0) -> dict:
+    """Fold Delta-W = scale * A@B (and the DoRA normalisation) into ``w`` and
+    drop the side-cars (deployment export)."""
+    from repro.models.common import dora_column_norm
+
+    def walk(node, name):
+        if _is_linear(node) and "lora_A" in node:
+            w = node["w"].astype(jnp.float32)
+            a = node["lora_A"].astype(jnp.float32)
+            b = node["lora_B"].astype(jnp.float32)
+            new_w = w + scale * (a @ b)
+            if "dora_m" in node:
+                norm = dora_column_norm(node["w"], node["lora_A"],
+                                        scale * node["lora_B"])
+                new_w = new_w * (node["dora_m"].astype(jnp.float32)
+                                 / norm)[..., None, :]
+            return {"w": new_w.astype(node["w"].dtype)}
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, name) for v in node)
+        return node
+
+    return walk(params, "")

@@ -1,0 +1,37 @@
+"""Latent anchor-proximity (LAP) uncertainty + precision weights (Eq. 6).
+
+u(x) = 0.5 * (1 - max_j cos(Pool(z_x), Pool(z_aj)))  in [0, 1]:
+samples projecting into latent voids far from every public anchor get
+u ~ 1 (high epistemic uncertainty).  Node weight p_k is the mean inverse
+uncertainty over its local data, normalised across nodes by the server —
+the paper's precision-weighted alternative to FedAvg.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def lap_uncertainty(pooled_samples: Array, pooled_anchors: Array,
+                    eps: float = 1e-8) -> Array:
+    """(N, D), (B, D) -> (N,) uncertainties in [0, 1]."""
+    z = pooled_samples.astype(jnp.float32)
+    a = pooled_anchors.astype(jnp.float32)
+    zn = z / jnp.sqrt(jnp.maximum((z * z).sum(-1, keepdims=True), eps))
+    an = a / jnp.sqrt(jnp.maximum((a * a).sum(-1, keepdims=True), eps))
+    sim = zn @ an.T                                   # (N, B)
+    return 0.5 * (1.0 - sim.max(axis=-1))
+
+
+def node_precision(uncertainties: Array, floor: float = 1e-3) -> Array:
+    """Unnormalised p_k = mean_i u^-1(x_i) over one node's local samples."""
+    return (1.0 / jnp.maximum(uncertainties, floor)).mean()
+
+
+def precision_weights(node_precisions: Array) -> Array:
+    """Server: normalise per-node precisions into aggregation weights
+    (the paper's 1/E factor)."""
+    p = jnp.maximum(node_precisions.astype(jnp.float32), 0.0)
+    return p / jnp.maximum(p.sum(), 1e-12)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLMStream, make_lm_batch, shard_batch
+from repro.data.synthetic import SyntheticMultimodal
+from repro.data.tokenizers import FrozenTokenizer, default_tokenizers

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: blockwise (flash) causal attention.
+
+Grid (BH, nq, nkv) with the KV axis innermost so the online-softmax
+running state (m, l, acc) lives in VMEM scratch across sequential KV steps.
+Causal block skipping: KV blocks strictly above the diagonal are skipped
+with ``pl.when`` — the FLOP savings the jnp oracle (masking only) cannot
+express; roofline §Perf quantifies the difference.
+
+Q/K/V tiles are (bq, dh)/(bkv, dh) VMEM panels; dh <= 256 for all assigned
+archs, so a 512 x 256 f32 panel is 0.5 MB — four panels + scratch fit VMEM
+with room for double buffering.  GQA is handled by folding heads into the
+leading BH axis and mapping each Q head onto its KV group via the
+BlockSpec index_map (no materialised K/V repeat in HBM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, nkv: int, bq: int, bkv: int,
+                  sk_valid: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: skip KV blocks entirely above the diagonal
+    run = (not causal) or (ki * bkv <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale           # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)                   # (bkv, dh)
+        s = q @ k.T                                        # (bq, bkv)
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kpos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        ok = kpos < sk_valid                               # mask KV padding
+        if causal:
+            ok = ok & (kpos <= qpos)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr \
+            + p @ v_ref[0].astype(jnp.float32)
+
+    @pl.when(ki == nkv - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: Array, k: Array, v: Array, *,
+                           causal: bool = True, scale: float = None,
+                           bq: int = 512, bkv: int = 512, n_rep: int = 1,
+                           interpret: bool = False) -> Array:
+    """q: (BH, Sq, dh); k, v: (BH//n_rep, Sk, dh). GQA: q head h reads KV
+    head h // n_rep via the index_map (zero-copy grouping)."""
+    bh, sq, dh = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else dh ** -0.5
+    bq = min(bq, sq)
+    bkv = min(bkv, sk)
+    pq, pk_ = (-sq) % bq, (-sk) % bkv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pk_:
+        k = jnp.pad(k, ((0, 0), (0, pk_), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk_), (0, 0)))
+    nq, nkv = (sq + pq) // bq, (sk + pk_) // bkv
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          nkv=nkv, bq=bq, bkv=bkv, sk_valid=sk),
+        grid=(bh, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, dh), lambda b, i, j, n_rep=n_rep:
+                         (b // n_rep, j, 0)),
+            pl.BlockSpec((1, bkv, dh), lambda b, i, j, n_rep=n_rep:
+                         (b // n_rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq + pq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: pairwise cosine-similarity Gram matrix (paper Eq. 1).
+
+The anchor Gram matrix is recomputed every local step (it sits inside the
+CKA loss), so on TPU it deserves an MXU-tiled kernel: the (B, D) pooled
+anchor block is tiled into VMEM (bm x D) x (bn x D) panels; each grid cell
+normalises its rows in-register and issues one (bm, D) @ (D, bn) MXU
+contraction.  D stays untiled: pooled activations are at most d_model=5120
+wide => a 128 x 5120 f32 panel is 2.6 MB, comfortably inside the ~16 MB
+VMEM budget, and keeping the contraction dim whole avoids a second
+accumulation loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _gram_kernel(x_ref, y_ref, o_ref, *, eps: float):
+    xi = x_ref[...].astype(jnp.float32)                    # (bm, D)
+    xj = y_ref[...].astype(jnp.float32)                    # (bn, D)
+    ni = jax.lax.rsqrt(jnp.maximum((xi * xi).sum(-1, keepdims=True), eps))
+    nj = jax.lax.rsqrt(jnp.maximum((xj * xj).sum(-1, keepdims=True), eps))
+    o_ref[...] = ((xi * ni) @ (xj * nj).T).astype(o_ref.dtype)
+
+
+def cosine_gram_pallas(x: Array, *, block: int = 128, eps: float = 1e-8,
+                       interpret: bool = False) -> Array:
+    """(B, D) -> (B, B). Rows padded to the block size; padding rows have
+    zero norm and are sliced away (their eps-guarded values never leak)."""
+    b, d = x.shape
+    bm = min(block, max(8, b))
+    pad = (-b) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    n = x.shape[0]
+    grid = (n // bm, n // bm)
+    out = pl.pallas_call(
+        functools.partial(_gram_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=interpret,
+    )(x, x)
+    return out[:b, :b]

@@ -1,0 +1,80 @@
+"""jit'd dispatch wrappers: Pallas kernels on TPU, jnp oracles elsewhere.
+
+``use_pallas(True/False)`` or the REPRO_USE_PALLAS env var forces a path;
+default: Pallas on TPU backends, reference on CPU (where non-interpret
+Pallas cannot lower).  ``interpret=True`` runs the Pallas kernel body in
+Python on CPU — how tests validate kernels in this container.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gram import cosine_gram_pallas
+from repro.kernels.lora_matmul import lora_matmul_pallas
+from repro.kernels.selective_scan import selective_scan_pallas
+
+Array = jax.Array
+_FORCE: Optional[bool] = None
+
+
+def use_pallas(flag: Optional[bool]) -> None:
+    global _FORCE
+    _FORCE = flag
+
+
+def _pallas_active() -> bool:
+    if _FORCE is not None:
+        return _FORCE
+    env = os.environ.get("REPRO_USE_PALLAS")
+    if env is not None:
+        return env not in ("0", "false", "")
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cosine_gram(x: Array, interpret: bool = False) -> Array:
+    if _pallas_active() or interpret:
+        return cosine_gram_pallas(x, interpret=interpret or
+                                  jax.default_backend() != "tpu")
+    return ref.cosine_gram_ref(x)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def lora_matmul(x: Array, w: Array, a: Array, b: Array,
+                scale: float = 1.0, interpret: bool = False) -> Array:
+    if _pallas_active() or interpret:
+        return lora_matmul_pallas(x, w, a, b, scale=scale,
+                                  interpret=interpret or
+                                  jax.default_backend() != "tpu")
+    return ref.lora_matmul_ref(x, w, a, b, scale)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "scale", "n_rep", "interpret"))
+def flash_attention(q: Array, k: Array, v: Array, causal: bool = True,
+                    scale: Optional[float] = None, n_rep: int = 1,
+                    interpret: bool = False) -> Array:
+    if _pallas_active() or interpret:
+        return flash_attention_pallas(
+            q, k, v, causal=causal, scale=scale, n_rep=n_rep,
+            interpret=interpret or jax.default_backend() != "tpu")
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=0)
+        v = jnp.repeat(v, n_rep, axis=0)
+    return ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def selective_scan(da: Array, dbx: Array, h0: Array, interpret: bool = False):
+    if _pallas_active() or interpret:
+        return selective_scan_pallas(
+            da, dbx, h0,
+            interpret=interpret or jax.default_backend() != "tpu")
+    return ref.selective_scan_ref(da, dbx, h0)

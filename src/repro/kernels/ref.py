@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+swept against in tests/test_kernels_*.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def cosine_gram_ref(x: Array, eps: float = 1e-8) -> Array:
+    """(B, D) -> (B, B) pairwise cosine similarities (paper Eq. 1)."""
+    x32 = x.astype(jnp.float32)
+    n = jnp.sqrt(jnp.maximum((x32 * x32).sum(-1, keepdims=True), eps))
+    xn = x32 / n
+    return xn @ xn.T
+
+
+def lora_matmul_ref(x: Array, w: Array, a: Array, b: Array,
+                    scale: float = 1.0) -> Array:
+    """y = x @ W + scale * (x @ A) @ B  (GeoLoRA fused linear).
+    x: (M, K); w: (K, N); a: (K, r); b: (r, N)."""
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    y = y + scale * (x.astype(jnp.float32) @ a.astype(jnp.float32)
+                     ) @ b.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, *,
+                        causal: bool = True, scale: float = None) -> Array:
+    """q: (BH, Sq, dh); k, v: (BH, Sk, dh) (GQA folded into BH upstream)."""
+    sq, sk = q.shape[1], k.shape[1]
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None] + (sk - sq)
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def selective_scan_ref(da: Array, dbx: Array, h0: Array) -> tuple:
+    """Diagonal recurrence h_t = da_t * h_{t-1} + dbx_t.
+    da, dbx: (B, S, C); h0: (B, C) -> (h_all (B, S, C), h_last (B, C))."""
+    def step(h, xs):
+        a, b = xs
+        h = a * h + b
+        return h, h
+    da_t = jnp.moveaxis(da.astype(jnp.float32), 1, 0)
+    dbx_t = jnp.moveaxis(dbx.astype(jnp.float32), 1, 0)
+    h_last, h_all = jax.lax.scan(step, h0.astype(jnp.float32), (da_t, dbx_t))
+    return jnp.moveaxis(h_all, 0, 1), h_last

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: chunked diagonal selective scan (Mamba-1 / RG-LRU).
+
+The GPU Mamba kernel is a fused sequential sweep relying on shared-memory
+warp shuffles — no TPU analogue.  The TPU adaptation (see DESIGN.md)
+re-blocks the recurrence: grid (B, C/bc, S/chunk) with the channel-blocked
+state carried in VMEM scratch across sequential chunk steps; inside a chunk
+a ``fori_loop`` walks rows in VMEM (VPU elementwise work; there is no MXU
+contraction in a diagonal scan, so the kernel is memory-bound by design —
+the roofline's memory term).
+
+Channels C = d_inner * state for Mamba (flattened) or lru_width for RG-LRU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _scan_kernel(da_ref, dbx_ref, h0_ref, h_ref, hlast_ref, carry_ref, *,
+                 chunk: int, nchunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        carry_ref[...] = h0_ref[0].astype(jnp.float32)      # (1, bc) -> (bc,)
+
+    da = da_ref[0].astype(jnp.float32)                      # (chunk, bc)
+    dbx = dbx_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = da[t] * h + dbx[t]
+        h_ref[0, t, :] = h.astype(h_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, carry_ref[...])
+    carry_ref[...] = h
+
+    @pl.when(ci == nchunks - 1)
+    def _done():
+        hlast_ref[0] = h.astype(hlast_ref.dtype)
+
+
+def selective_scan_pallas(da: Array, dbx: Array, h0: Array, *,
+                          chunk: int = 128, bc: int = 512,
+                          interpret: bool = False):
+    """da, dbx: (B, S, C); h0: (B, C) -> (h_all (B, S, C), h_last (B, C))."""
+    b, s, c = da.shape
+    chunk = min(chunk, s)
+    bc = min(bc, c)
+    ps, pc = (-s) % chunk, (-c) % bc
+    if ps or pc:
+        da = jnp.pad(da, ((0, 0), (0, ps), (0, pc)), constant_values=1.0)
+        dbx = jnp.pad(dbx, ((0, 0), (0, ps), (0, pc)))
+    if pc:
+        h0 = jnp.pad(h0, ((0, 0), (0, pc)))
+    ss, cc = s + ps, c + pc
+    nchunks = ss // chunk
+    h_all, h_last = pl.pallas_call(
+        functools.partial(_scan_kernel, chunk=chunk, nchunks=nchunks),
+        grid=(b, cc // bc, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, bc), lambda bi, cj, ci: (bi, ci, cj)),
+            pl.BlockSpec((1, chunk, bc), lambda bi, cj, ci: (bi, ci, cj)),
+            pl.BlockSpec((1, bc), lambda bi, cj, ci: (bi, cj)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, bc), lambda bi, cj, ci: (bi, ci, cj)),
+            pl.BlockSpec((1, bc), lambda bi, cj, ci: (bi, cj)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, ss, cc), jnp.float32),
+            jax.ShapeDtypeStruct((b, cc), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bc,), jnp.float32)],
+        interpret=interpret,
+    )(da, dbx, h0)
+    return h_all[:, :s, :c], h_last[:, :c]

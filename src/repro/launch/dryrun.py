@@ -1,0 +1,197 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and record memory / cost / collective data.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mistral-nemo-12b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --resume
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json; the
+roofline table (EXPERIMENTS.md section Roofline) is generated from them by
+benchmarks/roofline_table.py.
+"""
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+
+from repro.configs import (ASSIGNED_ARCHS, INPUT_SHAPES, get_config)  # noqa: E402
+from repro.core import lora as lora_mod                               # noqa: E402
+from repro.launch import input_specs as ispec                         # noqa: E402
+from repro.launch import mesh as mesh_mod                             # noqa: E402
+from repro.launch import shardings as shd                             # noqa: E402
+from repro.launch import steps as steps_mod                           # noqa: E402
+from repro.models import transformer as T                             # noqa: E402
+from repro.optim.adamw import AdamW                                   # noqa: E402
+from repro.roofline import analysis as roof                           # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _shardings(tree_specs, mesh):
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s if isinstance(s, P) else P()),
+        tree_specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_one(arch: str, shape_name: str, mesh_kind: str,
+              extra_tag: str = "", rt_override=None, lora_dora: bool = True,
+              rt_patch: dict = None, layout: str = "tp"):
+    """Returns (record, compiled) — compiled kept for ad-hoc inspection."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    reason = ispec.skip_reason(cfg, shape)
+    if reason:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}, None
+
+    mesh = mesh_mod.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    rt = rt_override or ispec.runtime_for(cfg, shape, mesh)
+    if layout in ("dp", "fsdp_dp"):
+        import dataclasses as _dc
+        all_axes = tuple(mesh.shape.keys())
+        rt = _dc.replace(rt, seq_shard=False, batch_axes=all_axes)
+    if rt_patch:
+        import dataclasses as _dc
+        rt = _dc.replace(rt, **rt_patch)
+    shd.reset_explain()
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            spec = lora_mod.LoRASpec(rank=16, dora=lora_dora)
+            params = ispec.abstract_params(cfg, spec)
+            mask = lora_mod.trainable_mask(params)
+            trainable, frozen = lora_mod.partition(params, mask)
+            opt = AdamW(lr=1e-4)
+            opt_state = jax.eval_shape(opt.init, trainable)
+            batch, bspecs, gbar = ispec.train_batch_specs(
+                cfg, shape, mesh,
+                data_axes=tuple(mesh.shape.keys())
+                if layout in ("dp", "fsdp_dp") else None)
+            from jax.sharding import PartitionSpec as P
+            pspecs = shd.param_specs(
+                params, mesh, {"fsdp_dp": "fsdp"}.get(layout, layout))
+            t_specs, f_specs = lora_mod.partition(pspecs, mask)
+            o_specs = {"m": t_specs, "v": t_specs, "step": P()}
+            step = steps_mod.make_fed_train_step(
+                cfg, rt, opt, k_nodes=mesh_mod.n_nodes(mesh))
+            in_shardings = (
+                _shardings(t_specs, mesh), _shardings(f_specs, mesh),
+                _shardings(o_specs, mesh), _shardings(bspecs, mesh),
+                _shardings(P(), mesh))
+            args = (trainable, frozen, opt_state, batch, gbar)
+            donate = (0, 2)          # trainable, opt_state updated in place
+        elif shape.kind == "prefill":
+            params = ispec.abstract_params(cfg)
+            batch, bspecs = ispec.serve_batch_specs(cfg, shape, mesh)
+            pspecs = shd.param_specs(params, mesh)
+            step = steps_mod.make_prefill_step(cfg, rt)
+            in_shardings = (_shardings(pspecs, mesh),
+                            _shardings(bspecs, mesh))
+            args = (params, batch)
+            donate = ()
+        else:  # decode
+            params = ispec.abstract_params(cfg)
+            batch, bspecs = ispec.serve_batch_specs(cfg, shape, mesh)
+            cache = ispec.abstract_cache(cfg, shape, rt)
+            cspecs = shd.cache_specs(cache, mesh)
+            pspecs = shd.param_specs(params, mesh)
+            step = steps_mod.make_decode_step(cfg, rt)
+            in_shardings = (_shardings(pspecs, mesh),
+                            _shardings(cspecs, mesh),
+                            _shardings(bspecs, mesh))
+            args = (params, cache, batch)
+            donate = (1,)            # cache updated in place
+
+        lowered = jax.jit(step, in_shardings=in_shardings,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mf = roof.model_flops(cfg, shape, training=(shape.kind == "train"))
+    rl = roof.roofline_from_compiled(compiled, n_chips=n_chips,
+                                     model_flops_global=mf)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "tag": extra_tag,
+        "status": "ok", "n_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "fallbacks": shd.explain(),
+        "roofline": rl.to_dict(),
+    }
+    print(compiled.memory_analysis())
+    return rec, compiled
+
+
+def result_path(arch, shape, mesh_kind, tag=""):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh_kind}{suffix}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                path = result_path(arch, shape, mesh_kind, args.tag)
+                if args.resume and os.path.exists(path):
+                    continue
+                t0 = time.time()
+                try:
+                    rec, _ = lower_one(arch, shape, mesh_kind, args.tag)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                with open(path, "w") as fh:
+                    json.dump(rec, fh, indent=1)
+                status = rec["status"]
+                n_ok += status == "ok"
+                n_skip += status == "skipped"
+                n_fail += status == "error"
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f"dom={r['dominant']} "
+                             f"c={r['compute_s']*1e3:.1f}ms "
+                             f"m={r['memory_s']*1e3:.1f}ms "
+                             f"x={r['collective_s']*1e3:.1f}ms")
+                elif status == "error":
+                    extra = rec["error"][:120]
+                print(f"[{status:7s}] {arch} {shape} {mesh_kind} "
+                      f"({time.time()-t0:.0f}s) {extra}", flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Abstract inputs (ShapeDtypeStruct — no allocation) for every
+(architecture x input-shape) combination, plus their PartitionSpecs.
+
+``train_4k`` lowers the federated round step (tokens+labels+anchors+G_bar);
+``prefill_32k`` lowers prefill; ``decode_32k`` / ``long_500k`` lower a
+single-token decode against an S-length cache.  Modality frontends are
+stubs per the brief: VLM batches carry CLIP-width patch embeddings, audio
+batches carry 1500 whisper-frame embeddings.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, InputShape, ModelConfig
+from repro.launch import mesh as mesh_mod
+from repro.launch import shardings as shd
+from repro.models import transformer as T
+
+ANCHORS = 32            # public anchor set size B (Gram is 32x32)
+ANCHOR_LEN = 128        # anchor token length
+
+f = jax.ShapeDtypeStruct
+
+
+def runtime_for(cfg: ModelConfig, shape: InputShape, mesh) -> T.Runtime:
+    window = 0
+    if shape.name == "long_500k" and cfg.family in ("dense", "vlm") \
+            and not cfg.sliding_window:
+        window = 8192            # flagged SWA variant (DESIGN.md)
+    return T.Runtime(
+        mesh=mesh,
+        ep_axis="model" if cfg.moe is not None else None,
+        batch_axes=mesh_mod.batch_axes(mesh) if mesh is not None else (),
+        remat=(shape.kind == "train"),
+        window_override=window,
+        # sequence-parallel residual stream: required to fit remat residuals
+        # in HBM for the big archs at 4k x 256 (see DESIGN.md / §Perf)
+        seq_shard=(shape.kind in ("train", "prefill")),
+    )
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def skip_reason(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    if shape.name in cfg.skip_shapes:
+        return cfg.long_context_variant or "skipped per config"
+    return None
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape, mesh,
+                      data_axes=None):
+    b, s = shape.global_batch, shape.seq_len
+    k = mesh_mod.n_nodes(mesh)
+    dt = _dtype(cfg)
+    batch = {}
+    if cfg.family == "vlm":
+        n_img = cfg.n_image_tokens
+        batch["tokens"] = f((b, s - n_img), jnp.int32)
+        batch["labels"] = f((b, s - n_img), jnp.int32)
+        batch["image_embeds"] = f((b, n_img, cfg.image_embed_dim), dt)
+    elif cfg.family == "audio":
+        batch["tokens"] = f((b, s), jnp.int32)
+        batch["labels"] = f((b, s), jnp.int32)
+        batch["enc_embeds"] = f((b, cfg.encoder_seq_len,
+                                 cfg.encoder_embed_dim), dt)
+        batch["anchor_enc_embeds"] = f(
+            (k, ANCHORS, cfg.encoder_seq_len, cfg.encoder_embed_dim), dt)
+    else:
+        batch["tokens"] = f((b, s), jnp.int32)
+        batch["labels"] = f((b, s), jnp.int32)
+    batch["anchors"] = f((k, ANCHORS, ANCHOR_LEN), jnp.int32)
+    specs = shd.batch_specs(batch, mesh, data_axes)
+    # anchors: leading dim = node count, sharded over the node axes
+    node_axes = mesh_mod.batch_axes(mesh)
+    a_spec = P(node_axes, None, None)
+    specs["anchors"] = a_spec
+    if "anchor_enc_embeds" in batch:
+        specs["anchor_enc_embeds"] = P(node_axes, None, None, None)
+    gbar = f((ANCHORS, ANCHORS), jnp.float32)
+    return batch, specs, gbar
+
+
+def serve_batch_specs(cfg: ModelConfig, shape: InputShape, mesh):
+    b, s = shape.global_batch, shape.seq_len
+    dt = _dtype(cfg)
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.family == "vlm":
+            batch["tokens"] = f((b, s - cfg.n_image_tokens), jnp.int32)
+            batch["image_embeds"] = f((b, cfg.n_image_tokens,
+                                       cfg.image_embed_dim), dt)
+        elif cfg.family == "audio":
+            batch["tokens"] = f((b, s), jnp.int32)
+            batch["enc_embeds"] = f((b, cfg.encoder_seq_len,
+                                     cfg.encoder_embed_dim), dt)
+        else:
+            batch["tokens"] = f((b, s), jnp.int32)
+        return batch, shd.batch_specs(batch, mesh)
+    batch = {"tokens": f((b, 1), jnp.int32)}
+    return batch, shd.batch_specs(batch, mesh)
+
+
+def abstract_cache(cfg: ModelConfig, shape: InputShape, rt: T.Runtime):
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len, rt))
+
+
+def abstract_params(cfg: ModelConfig, lora_spec=None):
+    from repro.core import lora as lora_mod
+
+    def build():
+        p = T.init_params(jax.random.PRNGKey(0), cfg)
+        if lora_spec is not None:
+            p = lora_mod.attach_lora(jax.random.PRNGKey(1), p, lora_spec)
+        return p
+    return jax.eval_shape(build)

@@ -1,0 +1,224 @@
+"""Sharding rule engine: param/batch/cache pytrees -> PartitionSpec trees.
+
+Rules are name-based (the param tree layout is uniform across the zoo):
+  - column-parallel linears (wq/wk/wv/gate/up/in_proj/...) shard the flat
+    output dim over ``model`` — note this shards H*dh, so it works even when
+    the head COUNT is not divisible (llama4's 40 heads, smollm's 9: the flat
+    5120/576 dims divide; XLA handles the head reshape);
+  - row-parallel linears (wo/down/out_proj/out) shard the input dim;
+  - MoE expert stacks shard the expert dim over ``model`` (expert parallel)
+    and the per-expert FFN dim over ``data`` (FSDP-style; unsharded on entry
+    to the expert shard_map);
+  - embeddings / lm_head shard the vocab dim over ``model``;
+  - batch-like arrays shard dim0 over ("pod","data") = the federated nodes;
+  - every rule falls back to replication when the dim is not divisible
+    (logged by ``explain()``); LoRA side-cars are tiny and stay replicated.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+COL_PARALLEL = {"wq", "wk", "wv", "wq_a", "wq_b", "w_dkv", "w_ukv", "gate",
+                "up", "in_proj", "in_gate", "in_rec", "w_a", "w_x",
+                "lm_head", "x_proj", "dt_proj"}
+ROW_PARALLEL = {"wo", "down", "out_proj", "out"}
+REPLICATED_LEAVES = {"lora_A", "lora_B", "dora_m", "scale", "conv_w",
+                     "conv_b", "dt_bias", "a_log", "d_skip", "lam", "b"}
+
+_FALLBACKS: List[str] = []          # replication decisions, for explain()
+
+
+def _axis(mesh: Mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)
+
+
+def _div(n: int, mesh: Mesh, axis) -> bool:
+    if isinstance(axis, tuple):
+        size = 1
+        for a in axis:
+            size *= _axis(mesh, a)
+    else:
+        size = _axis(mesh, axis)
+    return size > 1 and n % size == 0
+
+
+def _spec(ndim: int, dim: int, axis) -> P:
+    parts: list = [None] * ndim
+    parts[dim] = axis
+    return P(*parts)
+
+
+def _leaf_spec(path: Tuple[str, ...], leaf, mesh: Mesh,
+               layout: str = "tp") -> P:
+    names = [p for p in path]
+    leaf_name = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+    nd = leaf.ndim
+    shape = leaf.shape
+
+    def fallback(why: str) -> P:
+        _FALLBACKS.append(f"{'/'.join(names)}: {why} -> replicate")
+        return P()
+
+    if nd == 0 or leaf_name in REPLICATED_LEAVES:
+        return P()
+
+    if layout == "dp":
+        # pure data parallelism: params replicated, batch over every axis —
+        # the right mapping for sub-1B models on a 256-chip pod (§Perf).
+        return P()
+    if layout == "fsdp" and leaf_name in ("embed", "w") \
+            and "experts" not in names:
+        # ZeRO-3-style (MaxText convention): shard the CONTRACTION/embed dim
+        # (dim -2 of a linear; vocab dim of the embedding) so XLA lowers use
+        # sites to a weight all-gather instead of resharding activations.
+        # Ideal for the paper's GeoLoRA training: base weights are FROZEN
+        # (no grad sync) and the gathers overlap with compute (§Perf iter 4+).
+        dim = 0 if leaf_name == "embed" else nd - 2
+        for axis in (("data", "model"), ("model",), ("data",)):
+            if _div(shape[dim], mesh, axis if len(axis) > 1 else axis[0]):
+                return _spec(nd, dim, axis if len(axis) > 1 else axis[0])
+        # fall back to the widest dim
+        wide = max(range(nd), key=lambda i: shape[i])
+        for axis in (("data", "model"), ("model",), ("data",)):
+            if _div(shape[wide], mesh, axis if len(axis) > 1 else axis[0]):
+                return _spec(nd, wide, axis if len(axis) > 1 else axis[0])
+        return fallback(f"fsdp {shape[dim]} % mesh")
+
+    if leaf_name == "embed":
+        return (_spec(nd, 0, "model") if _div(shape[0], mesh, "model")
+                else fallback(f"vocab {shape[0]} % model"))
+    if leaf_name == "w":
+        inside_experts = "experts" in names
+        if inside_experts:
+            # (L, E, d, f) / (L, E, f, d): expert dim over model, widest
+            # remaining dim over data (FSDP)
+            e_dim = nd - 3
+            spec: list = [None] * nd
+            if _div(shape[e_dim], mesh, "model"):
+                spec[e_dim] = "model"
+            else:
+                _FALLBACKS.append(f"{'/'.join(names)}: experts {shape[e_dim]}"
+                                  " % model -> replicate expert dim")
+            wide = nd - 1 if shape[nd - 1] >= shape[nd - 2] else nd - 2
+            if _div(shape[wide], mesh, "data"):
+                spec[wide] = "data"
+            return P(*spec)
+        if parent in COL_PARALLEL or leaf_name in COL_PARALLEL:
+            return (_spec(nd, nd - 1, "model")
+                    if _div(shape[-1], mesh, "model")
+                    else fallback(f"col {shape[-1]} % model"))
+        if parent in ROW_PARALLEL:
+            return (_spec(nd, nd - 2, "model")
+                    if _div(shape[-2], mesh, "model")
+                    else fallback(f"row {shape[-2]} % model"))
+        if parent == "router":
+            return P()
+        if parent in ("adapter", "enc_adapter", "cls_head"):
+            return (_spec(nd, nd - 1, "model")
+                    if _div(shape[-1], mesh, "model") else P())
+        return fallback(f"unmatched linear '{parent}'")
+    return P()
+
+
+def _walk(tree, path, fn):
+    if isinstance(tree, dict):
+        return {k: _walk(v, path + (k,), fn) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_walk(v, path + (str(i),), fn)
+                          for i, v in enumerate(tree))
+    if tree is None:
+        return None
+    return fn(path, tree)
+
+
+def param_specs(params, mesh: Mesh, layout: str = "tp"):
+    return _walk(params, (), lambda p, l: _leaf_spec(p, l, mesh, layout))
+
+
+def param_shardings(params, mesh: Mesh, layout: str = "tp"):
+    return _walk(params, (),
+                 lambda p, l: NamedSharding(mesh,
+                                            _leaf_spec(p, l, mesh, layout)))
+
+
+# ----------------------------------------------------------------------
+def batch_dim_spec(mesh: Mesh, n: int, data_axes=None) -> Optional[tuple]:
+    """Sharding for a batch-like dim of size n over ("pod","data") (or the
+    given axes, e.g. all axes for the dp layout)."""
+    axes = tuple(a for a in (data_axes or ("pod", "data"))
+                 if a in mesh.shape)
+    if axes and _div(n, mesh, axes):
+        return axes
+    # try data only (pod replicated)
+    if "data" in mesh.shape and _div(n, mesh, "data"):
+        return ("data",)
+    return None
+
+
+def batch_specs(batch, mesh: Mesh, data_axes=None):
+    def f(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        return P(batch_dim_spec(mesh, leaf.shape[0], data_axes),
+                 *([None] * (leaf.ndim - 1)))
+    return _walk(batch, (), f)
+
+
+def cache_specs(cache, mesh: Mesh):
+    """Decode caches: leaves are (L, B, ...) stacked or (B, ...) tail
+    entries; shard the batch dim over nodes, KV-ish inner dims over model
+    where divisible."""
+    def f(path, leaf):
+        name = path[-1] if path else ""
+        nd = leaf.ndim
+        if nd == 0 or name == "len":
+            return P()
+        stacked = path[0] != "tail" if path else True
+        bdim = 1 if stacked else 0
+        if nd <= bdim:
+            return P()
+        spec: list = [None] * nd
+        spec[bdim] = batch_dim_spec(mesh, leaf.shape[bdim])
+        if name in ("k", "v", "cross_k", "cross_v") and nd == bdim + 4:
+            # NOTE: S-dim sharding (the MLA decode win) was measured 7-15x
+            # WORSE for GQA caches — the blockwise KV reshape forces
+            # per-block gathers of the sequence-sharded cache (see Perf).
+            if _div(leaf.shape[bdim + 2], mesh, "model"):
+                spec[bdim + 2] = "model"
+        if name in ("c_kv", "k_rope") and nd == bdim + 3:
+            # MLA compressed cache: shard the SEQUENCE dim over model —
+            # decode attention parallelises over cache positions (softmax
+            # partials psum tiny (B,H) stats), and the 576 B/token cache
+            # splits 16x per device (§Perf deepseek decode iteration).
+            if _div(leaf.shape[bdim + 1], mesh, "model"):
+                spec[bdim + 1] = "model"
+        if name == "h" and nd == bdim + 3:       # mamba (B, di, N)
+            if _div(leaf.shape[bdim + 1], mesh, "model"):
+                spec[bdim + 1] = "model"
+        if name in ("conv",) and nd == bdim + 3:
+            if _div(leaf.shape[bdim + 2], mesh, "model"):
+                spec[bdim + 2] = "model"
+        if name == "h" and nd == bdim + 2:       # rg-lru (B, w)
+            if _div(leaf.shape[bdim + 1], mesh, "model"):
+                spec[bdim + 1] = "model"
+        return P(*spec)
+    return _walk(cache, (), f)
+
+
+def to_shardings(specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def explain() -> List[str]:
+    """Replication fallbacks recorded since the last reset."""
+    return list(_FALLBACKS)
+
+
+def reset_explain() -> None:
+    _FALLBACKS.clear()

@@ -1,0 +1,124 @@
+"""Mesh-scale step functions lowered by the dry-run and the drivers.
+
+``make_fed_train_step`` is the paper's federated round as one SPMD program
+(FedSGD form: one local step + precision-weighted aggregation — the
+multi-local-step divergent form runs in ``launch/train.py``):
+
+  - the mesh batch axes ("pod","data") carry the K federated nodes
+    (one node per slice, node k's samples are batch rows k*b_loc:(k+1)*b_loc);
+  - each node's anchor pass produces its Gram G_k; loss_k = CE_k +
+    lambda*(1-CKA(G_k, G_bar))  (Eq. 3);
+  - LAP uncertainties (Eq. 6) give precision weights p_k; total loss
+    sum_k p_k * loss_k makes the aggregated update exactly the paper's
+    precision-weighted average of per-node GeoLoRA updates (Eq. 4/5 with
+    one local step);
+  - only side-cars (lora_B / dora_m) receive gradients; the collective
+    footprint over the node axes is therefore low-rank-sized — the paper's
+    communication claim, visible in the §Roofline collective term.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import cka as cka_mod
+from repro.core import lora as lora_mod
+from repro.core import uncertainty as unc
+from repro.models import transformer as T
+from repro.models.common import cross_entropy_loss, linear
+from repro.optim.adamw import AdamW
+
+Array = jax.Array
+
+
+def _per_node_ce(logits: Array, labels: Array, k_nodes: int) -> Array:
+    """(B, S, V), (B, S) -> (K,) per-node mean CE."""
+    logits32 = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold                                     # (B, S)
+    b = nll.shape[0]
+    return nll.reshape(k_nodes, b // k_nodes, -1).mean(axis=(1, 2))
+
+
+def make_fed_train_step(cfg: ModelConfig, rt: T.Runtime, opt: AdamW, *,
+                        k_nodes: int, lambda_geo: float = 1.0,
+                        aux_coeff: float = 0.01) -> Callable:
+    def step(trainable, frozen, opt_state, batch, gbar):
+        def loss_fn(train):
+            params = lora_mod.combine(train, frozen)
+            logits, aux = T.forward(params, batch, cfg, rt)
+            task_k = _per_node_ce(logits, batch["labels"], k_nodes)
+
+            # public-anchor pass (per node) -> Grams -> CKA alignment
+            anch = batch["anchors"]                       # (K, Ba, La)
+            k, ba, la = anch.shape
+            anchor_batch = {"tokens": anch.reshape(k * ba, la)}
+            if "anchor_enc_embeds" in batch:              # audio anchors
+                anchor_batch["enc_embeds"] = \
+                    batch["anchor_enc_embeds"].reshape(
+                        (k * ba,) + batch["anchor_enc_embeds"].shape[2:])
+            _, a_aux = T.forward(params, anchor_batch, cfg, rt)
+            pooled_a = a_aux["pooled"].reshape(k, ba, -1)  # (K, Ba, D)
+            grams = jax.vmap(cka_mod.cosine_gram)(pooled_a)
+            geo_k = jax.vmap(
+                lambda g: 1.0 - cka_mod.cka(g, gbar))(grams)
+
+            # LAP precision weights (Eq. 6) — stop-grad, server-side math
+            pooled_b = aux["pooled"].reshape(k, -1, aux["pooled"].shape[-1])
+            u = jax.vmap(unc.lap_uncertainty)(
+                jax.lax.stop_gradient(pooled_b),
+                jax.lax.stop_gradient(pooled_a))          # (K, b_loc)
+            p = jax.vmap(unc.node_precision)(u)
+            w = jax.lax.stop_gradient(unc.precision_weights(p))
+
+            loss = (w * (task_k + lambda_geo * geo_k)).sum()
+            loss = loss + aux_coeff * (aux["load_balance"] + aux["router_z"])
+            metrics = {"task": task_k.mean(), "geo": geo_k.mean(),
+                       "weights": w, "gbar_new": grams.mean(0)}
+            return loss, metrics
+
+        grads, metrics = jax.grad(loss_fn, has_aux=True)(trainable)
+        new_train, new_opt = opt.update(grads, opt_state, trainable)
+        return new_train, new_opt, metrics["gbar_new"], \
+            {"task": metrics["task"], "geo": metrics["geo"]}
+
+    return step
+
+
+def make_lm_train_step(cfg: ModelConfig, rt: T.Runtime, opt: AdamW,
+                       trainable_only: bool = False) -> Callable:
+    """Plain LM training step (FedAvg-full baseline / centralised)."""
+    def step(params, opt_state, batch):
+        def loss_fn(p):
+            logits, aux = T.forward(p, batch, cfg, rt)
+            loss = cross_entropy_loss(logits, batch["labels"])
+            return loss + 0.01 * (aux["load_balance"] + aux["router_z"]), loss
+        grads, ce = jax.grad(loss_fn, has_aux=True)(params)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, ce
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, rt: T.Runtime) -> Callable:
+    def step(params, batch):
+        return T.prefill(params, batch, cfg, rt,
+                         cache_len=_prefill_cache_len(batch, cfg))
+    return step
+
+
+def _prefill_cache_len(batch, cfg) -> int:
+    s = batch["tokens"].shape[1]
+    if cfg.family == "vlm" and "image_embeds" in batch:
+        s += batch["image_embeds"].shape[1]
+    return s + 128          # decode headroom
+
+
+def make_decode_step(cfg: ModelConfig, rt: T.Runtime) -> Callable:
+    def step(params, cache, batch):
+        return T.decode_step(params, cache, batch, cfg, rt)
+    return step

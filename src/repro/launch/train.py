@@ -1,0 +1,139 @@
+"""Federated training driver (multi-local-step, node-stacked GeoLoRA).
+
+The full protocol at mesh scale: node-private trainables carry a leading
+node axis sharded over the mesh batch axes; E local steps run with ZERO
+cross-node communication (vmap over the node axis — each mesh slice
+advances its own B_k / m_k); each round ends with the server step
+(consensus Gram + precision-weighted averaging), whose collective footprint
+is low-rank-sized — the paper's communication-efficiency claim, measurable
+here with --report-comm.
+
+  PYTHONPATH=src python -m repro.launch.train --arch fedmm-small \
+      --rounds 3 --local-steps 4 --batch 8 --seq 128 --tiny
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import aggregation as agg
+from repro.core import cka as cka_mod
+from repro.core import lora as lora_mod
+from repro.core import uncertainty as unc
+from repro.data.pipeline import SyntheticLMStream
+from repro.models import transformer as T
+from repro.models.common import cross_entropy_loss
+from repro.optim.adamw import AdamW
+
+
+def _broadcast_tree(tree, k):
+    return jax.tree.map(
+        lambda x: None if x is None else
+        jnp.broadcast_to(x, (k,) + x.shape).copy(), tree,
+        is_leaf=lambda x: x is None)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="fedmm-small")
+    ap.add_argument("--method", default="geodora",
+                    choices=["geolora", "geodora", "fedavg_full"])
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)     # per node
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--anchors", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--lambda-geo", type=float, default=1.0)
+    ap.add_argument("--rank", type=int, default=8)
+    ap.add_argument("--tiny", action="store_true",
+                    help="shrink the model for CPU smoke runs")
+    ap.add_argument("--precision-weighting", action="store_true",
+                    default=True)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.tiny:
+        cfg = cfg.with_(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                        head_dim=32, d_ff=256, vocab_size=512,
+                        dtype="float32")
+    k_nodes = args.nodes
+    key = jax.random.PRNGKey(0)
+    rt = T.Runtime()
+
+    params = T.init_params(key, cfg)
+    if args.method != "fedavg_full":
+        spec = lora_mod.LoRASpec(rank=args.rank,
+                                 dora=(args.method == "geodora"))
+        params = lora_mod.attach_lora(jax.random.fold_in(key, 1), params,
+                                      spec)
+        mask = lora_mod.trainable_mask(params)
+    else:
+        mask = jax.tree.map(lambda _: True, params)
+    trainable, frozen = lora_mod.partition(params, mask)
+    opt = AdamW(lr=args.lr, grad_clip=1.0)
+
+    node_train = _broadcast_tree(trainable, k_nodes)
+    node_opt = jax.vmap(opt.init)(node_train)
+    anchors = jax.random.randint(jax.random.fold_in(key, 2),
+                                 (args.anchors, args.seq), 0, cfg.vocab_size)
+
+    def local_step(train_k, opt_k, batch, gbar):
+        def loss_fn(tr):
+            p = lora_mod.combine(tr, frozen)
+            logits, aux = T.forward(p, {"tokens": batch["tokens"]}, cfg, rt)
+            task = cross_entropy_loss(logits, batch["labels"])
+            _, a_aux = T.forward(p, {"tokens": anchors}, cfg, rt)
+            gram = cka_mod.cosine_gram(a_aux["pooled"])
+            geo = 1.0 - cka_mod.cka(gram, gbar)
+            u = unc.lap_uncertainty(aux["pooled"], a_aux["pooled"])
+            return task + args.lambda_geo * geo, \
+                (task, geo, gram, unc.node_precision(u))
+        grads, (task, geo, gram, prec) = jax.grad(loss_fn, has_aux=True)(
+            train_k)
+        new_train, new_opt = opt.update(grads, opt_k, train_k)
+        return new_train, new_opt, task, geo, gram, prec
+
+    vstep = jax.jit(jax.vmap(local_step, in_axes=(0, 0, 0, None)))
+
+    streams = [iter(SyntheticLMStream(cfg.vocab_size, args.seq, args.batch,
+                                      seed=100 + i)) for i in range(k_nodes)]
+    gbar = jnp.eye(args.anchors)
+    t0 = time.time()
+    for rnd in range(args.rounds):
+        for step_i in range(args.local_steps):
+            batch = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                 *[next(s) for s in streams])
+            node_train, node_opt, task, geo, grams, prec = vstep(
+                node_train, node_opt, batch, gbar)
+        # ---- server: consensus Gram + precision-weighted averaging ----
+        gbar = grams.mean(axis=0)
+        w = (unc.precision_weights(prec) if args.precision_weighting
+             else jnp.full((k_nodes,), 1.0 / k_nodes))
+        avg = jax.tree.map(
+            lambda x: None if x is None else
+            jnp.tensordot(w.astype(jnp.float32), x.astype(jnp.float32),
+                          axes=1).astype(x.dtype),
+            node_train, is_leaf=lambda x: x is None)
+        node_train = _broadcast_tree(avg, k_nodes)
+        node_opt = jax.vmap(opt.init)(node_train)
+
+        up_bytes = lora_mod.param_bytes(avg) + args.anchors ** 2 * 4
+        full_bytes = lora_mod.param_bytes(
+            lora_mod.combine(trainable, frozen))
+        print(f"round {rnd}: task={float(task.mean()):.4f} "
+              f"geo={float(geo.mean()):.4f} "
+              f"w={[round(float(x), 3) for x in w]} "
+              f"uplink={up_bytes/1e6:.3f}MB vs full {full_bytes/1e6:.1f}MB "
+              f"({100 * (1 - up_bytes / full_bytes):.2f}% saved) "
+              f"[{time.time()-t0:.0f}s]", flush=True)
+    return float(task.mean())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Shared building blocks: norms, RoPE, linear (+GeoLoRA/GeoDoRA hooks), MLP.
+
+Parameters are plain pytrees (nested dicts).  Every linear is a dict
+``{"w": (d_in, d_out)[, "lora_A": (d_in, r), "lora_B": (r, d_out),
+"dora_m": (d_out,)]}`` so the paper's GeoLoRA / GeoDoRA attach uniformly to
+any weight in any architecture.  ``lora_A`` is the federation-shared frozen
+projection (paper Eq. 4); only ``lora_B`` (and ``dora_m``) are trainable and
+communicated.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def truncated_normal_init(key, shape, scale: float = 0.02, dtype=jnp.float32):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def make_linear(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return {"w": truncated_normal_init(key, (d_in, d_out), scale, dtype)}
+
+
+def add_lora(key, lin: dict, rank: int, dtype, a_std: float = 1.0) -> dict:
+    """Attach GeoLoRA params. ``lora_A`` is Gaussian and FROZEN (shared across
+    federation nodes, paper Eq. 4); ``lora_B`` starts at zero."""
+    d_in, d_out = lin["w"].shape[-2:]
+    batch_shape = lin["w"].shape[:-2]
+    ka, _ = jax.random.split(key)
+    lin = dict(lin)
+    lin["lora_A"] = (a_std * rank ** -0.5 *
+                     jax.random.normal(ka, batch_shape + (d_in, rank))).astype(dtype)
+    lin["lora_B"] = jnp.zeros(batch_shape + (rank, d_out), dtype)
+    return lin
+
+
+def add_dora(lin: dict) -> dict:
+    """Attach the GeoDoRA magnitude vector, initialised to column norms of W
+    (so the initial decomposition is exact, per DoRA [arXiv:2402.09353])."""
+    lin = dict(lin)
+    w = lin["w"].astype(jnp.float32)
+    lin["dora_m"] = jnp.sqrt((w * w).sum(axis=-2)).astype(lin["w"].dtype)
+    return lin
+
+
+def dora_column_norm(w: Array, a: Array, b: Array, eps: float = 1e-6) -> Array:
+    """||W + A@B||_col without materialising A@B:
+    ||col_j||^2 = ||W_j||^2 + 2 (W^T A B)_jj + (B^T (A^T A) B)_jj."""
+    w32, a32, b32 = (t.astype(jnp.float32) for t in (w, a, b))
+    wsq = (w32 * w32).sum(axis=-2)
+    m = jnp.einsum("...ij,...ir->...jr", w32, a32)          # (d_out, r)
+    cross = jnp.einsum("...jr,...rj->...j", m, b32)
+    g = jnp.einsum("...ir,...is->...rs", a32, a32)           # (r, r)
+    bsq = jnp.einsum("...rj,...rs,...sj->...j", b32, g, b32)
+    return jnp.sqrt(jnp.maximum(wsq + 2.0 * cross + bsq, eps))
+
+
+def linear(x: Array, lin: dict, lora_scale: float = 1.0) -> Array:
+    """Apply a (possibly GeoLoRA/GeoDoRA-augmented) linear layer."""
+    w = lin["w"]
+    y = x @ w.astype(x.dtype)
+    if "lora_A" in lin:
+        a = jax.lax.stop_gradient(lin["lora_A"]).astype(x.dtype)  # frozen shared A
+        b = lin["lora_B"].astype(x.dtype)
+        delta = (x @ a) @ b
+        y = y + lora_scale * delta
+        if "dora_m" in lin:
+            norm = dora_column_norm(jax.lax.stop_gradient(w), a,
+                                    lora_scale * b).astype(x.dtype)
+            y = y * (lin["dora_m"].astype(x.dtype) / norm)
+    elif "dora_m" in lin:
+        norm = dora_column_norm(jax.lax.stop_gradient(w),
+                                jnp.zeros(w.shape[:-2] + (w.shape[-2], 1), w.dtype),
+                                jnp.zeros(w.shape[:-2] + (1, w.shape[-1]), w.dtype))
+        y = y * (lin["dora_m"].astype(x.dtype) / norm.astype(x.dtype))
+    return y
+
+
+# ----------------------------------------------------------------------
+def rms_norm(x: Array, weight: Array, eps: float = 1e-5) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def make_rms_norm(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+# ----------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, d_head); positions: (..., S) int32."""
+    if theta <= 0:
+        return x
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                        # (d/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., :, None, :]                    # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int) -> Array:
+    """Whisper-style sinusoidal embeddings."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-jnp.log(10000.0) * jnp.arange(0, d_model, 2, dtype=jnp.float32)
+                  / d_model)
+    emb = jnp.zeros((seq_len, d_model), jnp.float32)
+    emb = emb.at[:, 0::2].set(jnp.sin(pos * div))
+    emb = emb.at[:, 1::2].set(jnp.cos(pos * div))
+    return emb
+
+
+# ----------------------------------------------------------------------
+def make_swiglu(key, d_model: int, d_ff: int, dtype) -> dict:
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "gate": make_linear(kg, d_model, d_ff, dtype),
+        "up": make_linear(ku, d_model, d_ff, dtype),
+        "down": make_linear(kd, d_ff, d_model, dtype),
+    }
+
+
+def swiglu(params: dict, x: Array) -> Array:
+    g = linear(x, params["gate"])
+    u = linear(x, params["up"])
+    return linear(jax.nn.silu(g) * u, params["down"])
+
+
+def make_gelu_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    ku, kd = jax.random.split(key)
+    return {"up": make_linear(ku, d_model, d_ff, dtype),
+            "down": make_linear(kd, d_ff, d_model, dtype)}
+
+
+def gelu_mlp(params: dict, x: Array) -> Array:
+    return linear(jax.nn.gelu(linear(x, params["up"])), params["down"])
+
+
+# ----------------------------------------------------------------------
+def cross_entropy_loss(logits: Array, labels: Array,
+                       mask: Optional[Array] = None) -> Array:
+    """Mean next-token CE in f32. logits: (..., V); labels int32 (...,)."""
+    logits32 = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def mean_pool(x: Array, mask: Optional[Array] = None) -> Array:
+    """Paper's Pool(): mean over the token axis -> (..., d_model)."""
+    if mask is None:
+        return x.mean(axis=-2)
+    m = mask[..., None].astype(x.dtype)
+    return (x * m).sum(axis=-2) / jnp.maximum(m.sum(axis=-2), 1.0)

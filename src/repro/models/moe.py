@@ -1,0 +1,144 @@
+"""Mixture-of-Experts FFN with TPU-idiomatic expert parallelism.
+
+Experts are sharded over the mesh ``model`` axis.  Inside ``shard_map`` each
+device processes only its local experts via capacity-based gather -> expert
+FFN -> weighted scatter-add, then contributions are combined with a ``psum``
+over the model axis (the expert-parallel collective that shows up in the
+roofline).  Shared (always-on) experts are a plain tensor-parallel SwiGLU
+computed outside the shard_map.  Without a mesh (CPU smoke tests) the same
+capacity kernel runs over all experts locally.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+
+def _capacity(t: int, top_k: int, n_experts: int, factor: float) -> int:
+    """Per-expert token capacity. The standard formula, floored so tiny
+    token counts (decode steps) never drop tokens."""
+    cap = int(math.ceil(t * top_k / n_experts * factor))
+    return min(t, max(cap, 8))
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import linear, make_linear, make_swiglu, swiglu
+
+Array = jax.Array
+
+
+def make_moe(key, cfg: ModelConfig, dtype) -> dict:
+    m = cfg.moe
+    d, f = cfg.d_model, m.d_ff_expert
+    kr, ke, ks = jax.random.split(key, 3)
+    keg, keu, ked = jax.random.split(ke, 3)
+    e = m.num_experts
+    p = {
+        # router kept in f32 for routing stability (standard practice)
+        "router": {"w": (d ** -0.5 * jax.random.normal(kr, (d, e))).astype(jnp.float32)},
+        "experts": {
+            "gate": {"w": (d ** -0.5 * jax.random.normal(keg, (e, d, f))).astype(dtype)},
+            "up": {"w": (d ** -0.5 * jax.random.normal(keu, (e, d, f))).astype(dtype)},
+            "down": {"w": (f ** -0.5 * jax.random.normal(ked, (e, f, d))).astype(dtype)},
+        },
+    }
+    if m.num_shared_experts:
+        p["shared"] = make_swiglu(ks, d, f * m.num_shared_experts, dtype)
+    return p
+
+
+def router_scores(p: dict, x: Array, cfg: ModelConfig
+                  ) -> Tuple[Array, Array, dict]:
+    """Full routing done once (replicated weights): returns dense per-expert
+    combine scores (B, S, E) plus aux losses."""
+    m = cfg.moe
+    logits = (x.astype(jnp.float32) @ p["router"]["w"])          # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, m.top_k)          # (B,S,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)             # renormalise
+    # dense combine matrix: scores[t, e] = gate weight if e chosen else 0
+    onehot = jax.nn.one_hot(gate_idx, m.num_experts, dtype=jnp.float32)
+    scores = (gate_vals[..., None] * onehot).sum(axis=-2)        # (B,S,E)
+    # aux losses (Switch-style load balance + router z-loss)
+    frac_tokens = onehot.sum(axis=-2).mean(axis=(0, 1)) / m.top_k  # (E,)
+    mean_prob = probs.mean(axis=(0, 1))
+    aux = {
+        "load_balance": m.num_experts * (frac_tokens * mean_prob).sum(),
+        "router_z": (jax.nn.logsumexp(logits, axis=-1) ** 2).mean(),
+    }
+    return scores, gate_idx, aux
+
+
+def _expert_block(weights: dict, x_flat: Array, scores: Array,
+                  capacity: int) -> Array:
+    """Process local experts on flat tokens. weights leaves: (E_loc, ...);
+    scores: (T, E_loc). Returns (T, D) combined output."""
+    t, d = x_flat.shape
+
+    def one_expert(y, packed):
+        wg, wu, wd, s_e = packed                                  # s_e: (T,)
+        top_s, top_idx = jax.lax.top_k(s_e, capacity)             # (C,)
+        xg = x_flat[top_idx]                                      # (C, D)
+        h = jax.nn.silu(xg @ wg.astype(xg.dtype)) * (xg @ wu.astype(xg.dtype))
+        yg = (h @ wd.astype(h.dtype)) * top_s[:, None].astype(x_flat.dtype)
+        return y.at[top_idx].add(yg), None
+
+    y0 = jnp.zeros((t, d), x_flat.dtype)
+    y, _ = jax.lax.scan(one_expert, y0,
+                        (weights["gate"]["w"], weights["up"]["w"],
+                         weights["down"]["w"], scores.T))
+    return y
+
+
+def moe_ffn(p: dict, x: Array, cfg: ModelConfig, *,
+            mesh=None, ep_axis: Optional[str] = None,
+            batch_axes: Tuple[str, ...] = ()) -> Tuple[Array, dict]:
+    """x: (B, S, D) -> (B, S, D), aux losses."""
+    m = cfg.moe
+    b, s, d = x.shape
+    scores, _, aux = router_scores(p, x, cfg)
+
+    if mesh is not None and ep_axis is not None and \
+            mesh.shape[ep_axis] > 1:
+        ep = mesh.shape[ep_axis]
+        assert m.num_experts % ep == 0, \
+            f"{m.num_experts} experts not divisible by {ep}-way {ep_axis}"
+        batch_in_mesh = tuple(a for a in batch_axes if a in mesh.shape)
+        n_data = math.prod(mesh.shape[a] for a in batch_in_mesh) or 1
+        b_loc = b // n_data if b % n_data == 0 else b
+        t_loc = b_loc * s
+        capacity = _capacity(t_loc, m.top_k, m.num_experts, m.capacity_factor)
+        bspec = batch_in_mesh if (b % n_data == 0 and n_data > 1) else None
+
+        def routed(x_blk, sc_blk, wg, wu, wd):
+            bb = x_blk.shape[0]
+            xf = x_blk.reshape(bb * s, d)
+            sf = sc_blk.reshape(bb * s, -1).astype(jnp.float32)
+            y = _expert_block({"gate": {"w": wg}, "up": {"w": wu},
+                               "down": {"w": wd}}, xf, sf, capacity)
+            y = jax.lax.psum(y, ep_axis)
+            return y.reshape(bb, s, d)
+
+        y = jax.shard_map(
+            routed, mesh=mesh,
+            in_specs=(P(bspec, None, None), P(bspec, None, ep_axis),
+                      P(ep_axis, None, None), P(ep_axis, None, None),
+                      P(ep_axis, None, None)),
+            out_specs=P(bspec, None, None),
+            check_vma=False,
+        )(x, scores, p["experts"]["gate"]["w"], p["experts"]["up"]["w"],
+          p["experts"]["down"]["w"])
+    else:
+        t = b * s
+        capacity = _capacity(t, m.top_k, m.num_experts, m.capacity_factor)
+        y = _expert_block(p["experts"], x.reshape(t, d),
+                          scores.reshape(t, -1).astype(jnp.float32),
+                          capacity).reshape(b, s, d)
+
+    if "shared" in p:
+        y = y + swiglu(p["shared"], x)
+    return y, aux

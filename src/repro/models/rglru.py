@@ -1,0 +1,104 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Same TPU chunked-scan machinery as the Mamba block (diagonal linear
+recurrence), with the Griffin gating:
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import linear, make_linear
+from repro.models.ssm import _chunked_diag_scan, causal_conv1d
+
+Array = jax.Array
+_C = 8.0
+
+
+def lru_width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def make_rglru_block(key, cfg: ModelConfig, dtype) -> dict:
+    """Full Griffin recurrent block: two input branches + RG-LRU + output."""
+    d, w = cfg.d_model, lru_width(cfg)
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    # Lambda init so a^c in [0.9, 0.999] (paper appendix)
+    u = jax.random.uniform(k6, (w,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))          # softplus^-1
+    return {
+        "in_gate": make_linear(k1, d, w, dtype),         # gelu gate branch
+        "in_rec": make_linear(k2, d, w, dtype),          # recurrent branch
+        "conv_w": (0.1 * jax.random.normal(k3, (cfg.rglru.conv_kernel, w))
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": make_linear(k4, w, w, dtype),             # recurrence gate
+        "w_x": make_linear(k5, w, w, dtype),             # input gate
+        "lam": lam,                                      # f32
+        "out": make_linear(jax.random.fold_in(key, 7), w, d, dtype),
+    }
+
+
+def _rglru_core(p: dict, xr: Array, h0: Array, chunk: int
+                ) -> Tuple[Array, Array]:
+    """xr: (B,S,w) post-conv recurrent branch -> (h_all, h_last)."""
+    r = jax.nn.sigmoid(linear(xr, p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear(xr, p["w_x"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # (B,S,w)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * (i * xr.astype(jnp.float32))
+    return _chunked_diag_scan(a, gated, h0, chunk)
+
+
+def rglru_forward(p: dict, x: Array, cfg: ModelConfig, *,
+                  h0: Array = None, conv0: Array = None
+                  ) -> Tuple[Array, dict]:
+    """x: (B,S,D) -> (B,S,D); returns (y, state)."""
+    b, s, _ = x.shape
+    w = lru_width(cfg)
+    gate = jax.nn.gelu(linear(x, p["in_gate"]))
+    xr = linear(x, p["in_rec"])
+    if conv0 is not None:
+        cat = jnp.concatenate([conv0.astype(xr.dtype), xr], axis=1)
+        xr_c = causal_conv1d(cat, p["conv_w"], p["conv_b"])[:, conv0.shape[1]:]
+    else:
+        xr_c = causal_conv1d(xr, p["conv_w"], p["conv_b"])
+    h0 = h0 if h0 is not None else jnp.zeros((b, w), jnp.float32)
+    h_all, h_last = _rglru_core(p, xr_c, h0, cfg.rglru.chunk)
+    y = (h_all.astype(x.dtype) * gate)
+    state = {"h": h_last, "conv": xr[:, -(cfg.rglru.conv_kernel - 1):, :]}
+    return linear(y, p["out"]), state
+
+
+def init_rglru_state(batch: int, cfg: ModelConfig, dtype) -> dict:
+    w = lru_width(cfg)
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.rglru.conv_kernel - 1, w), dtype)}
+
+
+def rglru_decode(p: dict, x: Array, state: dict, cfg: ModelConfig
+                 ) -> Tuple[Array, dict]:
+    """Single-token decode, O(1) state."""
+    gate = jax.nn.gelu(linear(x, p["in_gate"]))          # (B,1,w)
+    xr = linear(x, p["in_rec"])
+    conv_buf = jnp.concatenate([state["conv"].astype(xr.dtype), xr], axis=1)
+    cw = p["conv_w"].astype(jnp.float32)
+    xr_c = (conv_buf.astype(jnp.float32) * cw[None]).sum(axis=1, keepdims=True) \
+        + p["conv_b"].astype(jnp.float32)
+    xr_c = xr_c.astype(x.dtype)
+    r = jax.nn.sigmoid(linear(xr_c, p["w_a"]).astype(jnp.float32))[:, 0]
+    i = jax.nn.sigmoid(linear(xr_c, p["w_x"]).astype(jnp.float32))[:, 0]
+    a = jnp.exp(-_C * jax.nn.softplus(p["lam"]) * r)
+    h = a * state["h"] + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * (i * xr_c[:, 0].astype(jnp.float32))
+    y = (h.astype(x.dtype)[:, None] * gate)
+    new_state = {"h": h, "conv": conv_buf[:, 1:]}
+    return linear(y, p["out"]), new_state

@@ -1,0 +1,171 @@
+"""Mamba-1 selective SSM block (Falcon-Mamba) with a TPU-adapted chunked
+associative scan.
+
+GPU Mamba uses a fused sequential CUDA kernel; on TPU we re-block the
+recurrence: ``lax.scan`` over sequence chunks carrying the state, with a
+log-depth ``associative_scan`` inside each chunk (HBM->VMEM friendly,
+work-efficient).  The Pallas kernel in ``repro.kernels.selective_scan``
+implements the same chunking with explicit VMEM tiles; this module is the
+pure-jnp reference path used on CPU.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import linear, make_linear
+
+Array = jax.Array
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return cfg.ssm.dt_rank or -(-cfg.d_model // 16)
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def make_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    s = cfg.ssm
+    d, di, dtr, n = cfg.d_model, d_inner(cfg), dt_rank(cfg), s.state_dim
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    # S4D-real initialisation of A
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (di, 1))
+    dt_init = jnp.exp(jax.random.uniform(k5, (di,), jnp.float32)
+                      * (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+    return {
+        "in_proj": make_linear(k1, d, 2 * di, dtype),
+        "conv_w": (0.1 * jax.random.normal(k2, (s.conv_kernel, di))).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": make_linear(k3, di, dtr + 2 * n, dtype),
+        "dt_proj": make_linear(k4, dtr, di, dtype, scale=dtr ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(dt_init)).astype(jnp.float32),
+        "a_log": jnp.log(a_init),                      # f32: A = -exp(a_log)
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": make_linear(k6, di, d, dtype),
+    }
+
+
+def causal_conv1d(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv. x: (B,S,C); w: (K,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32), w[:, None, :].astype(jnp.float32),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _chunked_diag_scan(da: Array, dbx: Array, h0: Array, chunk: int
+                       ) -> Tuple[Array, Array]:
+    """Diagonal linear recurrence h_t = da_t * h_{t-1} + dbx_t.
+    da, dbx: (B, S, ...) f32; h0: (B, ...). Returns (h_all (B,S,...), h_last).
+    lax.scan over S/chunk chunks, associative_scan inside each chunk."""
+    b, s = da.shape[:2]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:  # identity elements: a=1, b=0 leave the state untouched
+        cfg_pad = [(0, 0), (0, pad)] + [(0, 0)] * (da.ndim - 2)
+        da = jnp.pad(da, cfg_pad, constant_values=1.0)
+        dbx = jnp.pad(dbx, cfg_pad)
+    n_chunks = (s + pad) // chunk
+    tail = da.shape[2:]
+    da_c = da.reshape((b, n_chunks, chunk) + tail).transpose(
+        (1, 0, 2) + tuple(range(3, 3 + len(tail))))
+    dbx_c = dbx.reshape((b, n_chunks, chunk) + tail).transpose(
+        (1, 0, 2) + tuple(range(3, 3 + len(tail))))
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, blk):
+        da_j, dbx_j = blk                               # (B, chunk, ...)
+        a_cum, b_cum = jax.lax.associative_scan(combine, (da_j, dbx_j), axis=1)
+        h_all = a_cum * h[:, None] + b_cum              # (B, chunk, ...)
+        return h_all[:, -1], h_all
+
+    h_last, h_chunks = jax.lax.scan(body, h0, (da_c, dbx_c))
+    h_all = h_chunks.transpose((1, 0, 2) + tuple(range(3, 3 + len(tail))))
+    h_all = h_all.reshape((b, s + pad) + tail)[:, :s]
+    return h_all, h_last
+
+
+def mamba_forward(p: dict, x: Array, cfg: ModelConfig, *,
+                  h0: Array = None, conv0: Array = None
+                  ) -> Tuple[Array, dict]:
+    """x: (B, S, D) -> (B, S, D). Returns (y, final_state)."""
+    s_cfg = cfg.ssm
+    b, s, _ = x.shape
+    di, n = d_inner(cfg), s_cfg.state_dim
+    xz = linear(x, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    if conv0 is not None:                               # stitch conv state
+        x_cat = jnp.concatenate([conv0.astype(x_in.dtype), x_in], axis=1)
+        x_conv = causal_conv1d(x_cat, p["conv_w"], p["conv_b"])[:, conv0.shape[1]:]
+    else:
+        x_conv = causal_conv1d(x_in, p["conv_w"], p["conv_b"])
+    x_conv = jax.nn.silu(x_conv)
+
+    dbl = linear(x_conv, p["x_proj"])
+    dtr = dt_rank(cfg)
+    dt_low, b_ssm, c_ssm = jnp.split(dbl, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(linear(dt_low, p["dt_proj"]).astype(jnp.float32)
+                         + p["dt_bias"])                # (B,S,di)
+    a = -jnp.exp(p["a_log"])                            # (di, N)
+    da = jnp.exp(dt[..., None] * a)                     # (B,S,di,N)
+    dbx = (dt * x_conv.astype(jnp.float32))[..., None] \
+        * b_ssm.astype(jnp.float32)[..., None, :]       # (B,S,di,N)
+    h0 = h0 if h0 is not None else jnp.zeros((b, di, n), jnp.float32)
+    h_all, h_last = _chunked_diag_scan(da, dbx, h0, s_cfg.chunk)
+    y = jnp.einsum("bsdn,bsn->bsd", h_all,
+                   c_ssm.astype(jnp.float32))           # (B,S,di)
+    y = y + p["d_skip"] * x_conv.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    state = {"h": h_last,
+             "conv": x_in[:, -(s_cfg.conv_kernel - 1):, :]}
+    return linear(y, p["out_proj"]), state
+
+
+def init_mamba_state(batch: int, cfg: ModelConfig, dtype) -> dict:
+    s = cfg.ssm
+    return {"h": jnp.zeros((batch, d_inner(cfg), s.state_dim), jnp.float32),
+            "conv": jnp.zeros((batch, s.conv_kernel - 1, d_inner(cfg)), dtype)}
+
+
+def mamba_decode(p: dict, x: Array, state: dict, cfg: ModelConfig
+                 ) -> Tuple[Array, dict]:
+    """Single-token decode. x: (B, 1, D); O(1) state update."""
+    s_cfg = cfg.ssm
+    b = x.shape[0]
+    n = s_cfg.state_dim
+    xz = linear(x, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)                 # (B,1,di)
+    conv_buf = jnp.concatenate([state["conv"].astype(x_in.dtype), x_in], axis=1)
+    w = p["conv_w"].astype(jnp.float32)                 # (K, di)
+    x_conv = (conv_buf.astype(jnp.float32) * w[None]).sum(axis=1, keepdims=True) \
+        + p["conv_b"].astype(jnp.float32)
+    x_conv = jax.nn.silu(x_conv).astype(x.dtype)        # (B,1,di)
+
+    dbl = linear(x_conv, p["x_proj"])
+    dtr = dt_rank(cfg)
+    dt_low, b_ssm, c_ssm = jnp.split(dbl, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(linear(dt_low, p["dt_proj"]).astype(jnp.float32)
+                         + p["dt_bias"])[:, 0]          # (B,di)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt[..., None] * a)                     # (B,di,N)
+    dbx = (dt * x_conv[:, 0].astype(jnp.float32))[..., None] \
+        * b_ssm[:, 0].astype(jnp.float32)[:, None, :]   # (B,di,N)
+    h = da * state["h"] + dbx
+    y = jnp.einsum("bdn,bn->bd", h, c_ssm[:, 0].astype(jnp.float32))
+    y = y + p["d_skip"] * x_conv[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)[:, None]
+    new_state = {"h": h, "conv": conv_buf[:, 1:]}
+    return linear(y, p["out_proj"]), new_state

@@ -1,0 +1,72 @@
+"""AdamW + LR schedules, from scratch (no optax in the environment).
+
+Works on partitioned pytrees: ``None`` leaves (frozen params under the
+paper's GeoLoRA protocol) are passed through untouched, so optimizer state
+is only materialised for the trainable side-cars — the memory win that
+makes federated fine-tuning of a huge global model feasible on nodes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _map(f, *trees):
+    return jax.tree.map(
+        lambda *xs: None if xs[0] is None else f(*xs), *trees,
+        is_leaf=lambda x: x is None)
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0
+    schedule: Optional[Callable] = None      # step -> multiplier
+
+    def init(self, params) -> dict:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"m": _map(zeros, params), "v": _map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        if self.grad_clip > 0:
+            leaves = [g for g in jax.tree.leaves(grads) if g is not None]
+            gnorm = jnp.sqrt(sum((g.astype(jnp.float32) ** 2).sum()
+                                 for g in leaves))
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = _map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        m = _map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+                 state["m"], grads)
+        v = _map(lambda vv, g: b2 * vv + (1 - b2)
+                 * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        mhat_scale = 1.0 / (1 - b1 ** step.astype(jnp.float32))
+        vhat_scale = 1.0 / (1 - b2 ** step.astype(jnp.float32))
+        lr = self.lr * (self.schedule(step) if self.schedule else 1.0)
+
+        def upd(p, mm, vv):
+            u = (mm * mhat_scale) / (jnp.sqrt(vv * vhat_scale) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = _map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "step": step}
+
+
+def warmup_cosine(warmup: int, total: int, floor: float = 0.1) -> Callable:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return sched

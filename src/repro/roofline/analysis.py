@@ -1,0 +1,383 @@
+"""Three-term roofline from a compiled dry-run artifact (no hardware).
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s          (197 TF bf16, v5e)
+  memory     = HLO_bytes_per_device / HBM_bw               (819 GB/s)
+  collective = collective_operand_bytes_per_device / ICI_bw (~50 GB/s/link)
+
+``cost_analysis()`` on the partitioned executable yields per-device FLOPs /
+bytes.  Collective bytes are NOT in cost_analysis: we stream the optimized
+HLO text and sum operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops (documented assumption: each device
+pushes roughly its operand-size bytes through its ICI links; ring-algorithm
+constant factors ~2(n-1)/n are absorbed into the link-bandwidth figure).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+HW = {
+    "peak_flops_bf16": 197e12,
+    "hbm_bw": 819e9,
+    "ici_bw": 50e9,
+    "hbm_bytes": 16 * 2 ** 30,
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# wire-traffic factor on the RESULT size (ring algorithms, per device):
+#   all-reduce moves ~2x its buffer; gather/scatter/permute ~1x.
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_RESULT_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"([\w\-]+)\(")
+_CALLED_RE = re.compile(r"(?:condition|body|to_apply|calls)=%?([\w.\-]+)")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(\([^=]*\))?\s*->")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(result: str) -> int:
+    return sum(_shape_bytes(dt, dims)
+               for dt, dims in _SHAPE_RE.findall(result))
+
+
+def _split_computations(hlo_text):
+    """computation name -> list of instruction lines."""
+    comps = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{") and "->" in stripped:
+                tok = stripped.split()
+                name = tok[1] if tok[0] == "ENTRY" else tok[0]
+                cur = name.lstrip("%")
+                comps[cur] = []
+            continue
+        if stripped == "}":
+            cur = None
+        else:
+            comps[cur].append(line)
+    return comps
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, int]:
+    """Per-device wire bytes per collective kind from partitioned scheduled
+    HLO.  Structural parse: collectives inside while (layer-scan) bodies are
+    multiplied by the loop trip count (read from the condition computation's
+    comparison constant); nested scans compose multiplicatively."""
+    comps = _split_computations(hlo_text)
+
+    def cond_trip(cond_name):
+        best = 1
+        for line in comps.get(cond_name, ()):  # largest constant in the cond
+            for c in _CONST_RE.findall(line):
+                best = max(best, int(c))
+        return best
+
+    info = {}
+    details = {}
+    for name, lines in comps.items():
+        own = {k: 0.0 for k in _COLLECTIVES}
+        counts = {k: 0 for k in _COLLECTIVES}
+        calls = []
+        for line in lines:
+            m = _RESULT_RE.match(line)
+            if m:
+                op = m.group(2)
+                base = op[:-6] if op.endswith("-start") else op
+                if base in _COLLECTIVES and not op.endswith("-done"):
+                    nb = _WIRE_FACTOR[base] * _result_bytes(m.group(1))
+                    own[base] += nb
+                    counts[base] += 1
+                    om = re.search(r'op_name="([^"]+)"', line)
+                    details.setdefault(name, []).append(
+                        (base, nb, m.group(1)[:60],
+                         om.group(1)[-90:] if om else ""))
+            if m and m.group(2) == "while":
+                cond = body = None
+                for cm in re.finditer(r"(condition|body)=%?([\w.\-]+)", line):
+                    if cm.group(1) == "condition":
+                        cond = cm.group(2)
+                    else:
+                        body = cm.group(2)
+                if body in comps:
+                    calls.append((body, cond_trip(cond) if cond else 1))
+            else:
+                for called in _CALLED_RE.findall(line):
+                    if called in comps:
+                        calls.append((called, 1))
+        info[name] = (own, counts, calls)
+
+    entry = None
+    for name in comps:          # ENTRY holds "main" in jitted modules
+        if "main" in name:
+            entry = name
+    if entry is None and comps:
+        entry = list(comps)[-1]
+
+    totals = {k: 0.0 for k in _COLLECTIVES}
+    counts_total = {k: 0 for k in _COLLECTIVES}
+    stack = []
+
+    def walk(name, mult):
+        if name not in info or name in stack:
+            return
+        stack.append(name)
+        own, counts, calls = info[name]
+        for k in _COLLECTIVES:
+            totals[k] += mult * own[k]
+            counts_total[k] += counts[k]
+        for callee, m in calls:
+            walk(callee, mult * m)
+        stack.pop()
+
+    # attribute per-instruction bytes x loop multiplicity
+    contrib = []
+    mults = {}
+
+    def walk2(name, mult):
+        if name not in info or name in stack:
+            return
+        stack.append(name)
+        mults[name] = mults.get(name, 0.0) + mult
+        for callee, m in info[name][2]:
+            walk2(callee, mult * m)
+        stack.pop()
+
+    walk2(entry, 1.0)
+    for cname, items in details.items():
+        mult = mults.get(cname, 0.0)
+        if mult <= 0:
+            continue
+        for base, nb, shape, opname in items:
+            contrib.append((nb * mult, base, shape, f"x{int(mult)}", opname))
+    contrib.sort(reverse=True)
+
+    walk(entry, 1.0)
+    out = {k: int(v) for k, v in totals.items()}
+    out["_counts"] = counts_total
+    out["_top"] = [
+        {"bytes": int(b), "kind": k, "shape": sh, "mult": mu, "op": op}
+        for b, k, sh, mu, op in contrib[:12]]
+    return out
+
+
+
+
+# ----------------------------------------------------------------------
+# Structural FLOP / byte counting.  XLA's cost_analysis() counts while-loop
+# bodies ONCE, undercounting scanned (layers) programs by ~L x.  We re-count
+# from the scheduled HLO with the same call-graph walk as the collectives:
+#   flops: 2 * prod(result dims) * contraction size, for every dot in every
+#          computation reached from ENTRY (fusion bodies included),
+#          multiplied by enclosing while trip counts;
+#   bytes: operands + results of instructions in ENTRY/while bodies only
+#          (fusion internals stay on-chip, which is the point of fusion).
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _parse_shape(result: str):
+    m = _SHAPE_RE.search(result)
+    if not m:
+        return None, 0
+    dt, dims = m.group(1), m.group(2)
+    shape = [int(d) for d in dims.split(",")] if dims else []
+    return shape, _shape_bytes(dt, dims)
+
+
+def structural_cost(hlo_text: str):
+    """Returns (flops, bytes_accessed) with loop-trip multipliers."""
+    comps = _split_computations(hlo_text)
+
+    def cond_trip(cond_name):
+        best = 1
+        for line in comps.get(cond_name, ()):
+            for c in _CONST_RE.findall(line):
+                best = max(best, int(c))
+        return best
+
+    # per computation: symbols, flops, bytes, calls
+    info = {}
+    for name, lines in comps.items():
+        sym = {}
+        flops = 0.0
+        nbytes = 0.0
+        calls = []     # (callee, trip, kind) kind: 'loop'|'call'
+        for line in lines:
+            m = _RESULT_RE.match(line)
+            if not m:
+                continue
+            res_name = line.split("=")[0].strip().lstrip("%").split()[-1] \
+                if "=" in line else ""
+            # robust: first token before '='
+            res_name = line.strip().split("=")[0].strip() \
+                .lstrip("ROOT").strip().lstrip("%")
+            shape, rbytes = _parse_shape(m.group(1))
+            sym[res_name] = (shape, rbytes)
+            op = m.group(2)
+            if op == "dot":
+                cm = _DOT_CONTRACT_RE.search(line)
+                args = _OPERAND_RE.findall(line[m.end():])
+                lhs = sym.get(args[0], (None, 0))[0] if args else None
+                csize = 1
+                if cm and lhs:
+                    for idx in (int(i) for i in cm.group(1).split(",")
+                                if i != ""):
+                        if idx < len(lhs):
+                            csize *= lhs[idx]
+                if shape is not None:
+                    n = 1
+                    for d in shape:
+                        n *= d
+                    flops += 2.0 * n * csize
+            if op == "while":
+                cond = body = None
+                for c in re.finditer(r"(condition|body)=%?([\w.\-]+)", line):
+                    if c.group(1) == "condition":
+                        cond = c.group(2)
+                    else:
+                        body = c.group(2)
+                if body in comps:
+                    calls.append((body, cond_trip(cond) if cond else 1,
+                                  "loop"))
+            elif op == "fusion" or "calls=" in line or "to_apply=" in line:
+                for called in _CALLED_RE.findall(line):
+                    if called in comps:
+                        calls.append((called, 1, "call"))
+            # bytes: result + operands (names resolved in this computation)
+            opers = _OPERAND_RE.findall(line[m.end():line.find("metadata")
+                                              if "metadata" in line
+                                              else len(line)])
+            obytes = sum(sym.get(a, (None, 0))[1] for a in opers)
+            nbytes += rbytes + obytes
+        info[name] = (flops, nbytes, calls)
+
+    entry = None
+    for name in comps:
+        if "main" in name:
+            entry = name
+    if entry is None and comps:
+        entry = list(comps)[-1]
+
+    total = {"flops": 0.0, "bytes": 0.0}
+    stack = []
+
+    def walk(name, mult, count_bytes):
+        if name not in info or name in stack:
+            return
+        stack.append(name)
+        flops, nbytes, calls = info[name]
+        total["flops"] += mult * flops
+        if count_bytes:
+            total["bytes"] += mult * nbytes
+        for callee, trip, kind in calls:
+            walk(callee, mult * trip, count_bytes and kind == "loop")
+        stack.pop()
+
+    walk(entry, 1.0, True)
+    return total["flops"], total["bytes"]
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collectives: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_per_device: float
+    useful_flops_ratio: float
+    memory_stats: Optional[dict] = None
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def roofline_from_compiled(compiled, *, n_chips: int,
+                           model_flops_global: float = 0.0,
+                           hw: dict = HW) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+    txt = compiled.as_text()
+    s_flops, s_bytes = structural_cost(txt)
+    # XLA cost_analysis counts while (scan) bodies ONCE — undercounting
+    # layer-scanned programs by ~n_layers. The structural dot-counter
+    # multiplies by trip counts; its FLOPs are trustworthy. Raw structural
+    # BYTES over-count (every instruction = HBM traffic, no fusion), so the
+    # memory estimate scales XLA's own bytes-accessed by the loop-undercount
+    # factor measured on FLOPs (the loops dominate both).
+    flops = max(xla_flops, s_flops)
+    trip_factor = max(1.0, s_flops / xla_flops) if xla_flops else 1.0
+    nbytes = xla_bytes * trip_factor
+    coll = parse_collectives(txt)
+    coll_bytes = float(sum(v for k, v in coll.items() if k in _COLLECTIVES))
+    compute_s = flops / hw["peak_flops_bf16"]
+    memory_s = nbytes / hw["hbm_bw"]
+    collective_s = coll_bytes / hw["ici_bw"]
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_global / max(n_chips, 1)
+    mem_stats = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem_stats = {
+                k: int(getattr(ma, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(ma, k)}
+    except Exception:
+        pass
+    return Roofline(
+        flops_per_device=flops,
+        bytes_per_device=nbytes,
+        collective_bytes_per_device=coll_bytes,
+        collectives=coll,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops_per_device=mf,
+        useful_flops_ratio=(mf / flops) if flops else 0.0,
+        memory_stats=mem_stats,
+    )
+
+
+def model_flops(cfg, shape, *, training: bool) -> float:
+    """6*N*D (dense) or 6*N_active*D (MoE); D = tokens processed.  Decode
+    processes global_batch tokens per step (one each)."""
+    n = cfg.active_param_count
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d           # fwd+bwd
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    return 2.0 * n * shape.global_batch

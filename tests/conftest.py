@@ -1,0 +1,11 @@
+import os
+
+# Smoke tests must see the real (1-device) CPU — never the dry-run's 512
+# placeholder devices (see launch/dryrun.py which sets this itself).
+assert "xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", ""), \
+    "do not set the dry-run XLA_FLAGS globally"
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,110 @@
+"""Attention module: blockwise online-softmax vs direct, masks, MLA."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import MLAConfig, get_config, reduced
+from repro.models import attention as A
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rnd(i, shape):
+    return jax.random.normal(jax.random.fold_in(KEY, i), shape)
+
+
+def naive(q, k, v, kind, window):
+    b, t, h, dh = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    kk = jnp.repeat(k, rep, axis=2)
+    vv = jnp.repeat(v, rep, axis=2)
+    sc = jnp.einsum("bthd,bshd->bhts", q, kk) * dh ** -0.5
+    i = jnp.arange(t)[:, None]
+    j = jnp.arange(s)[None, :]
+    if kind == "causal":
+        ok = j <= i
+    elif kind == "sliding":
+        ok = (j <= i) & (i - j < window)
+    elif kind == "chunked":
+        ok = (j <= i) & (i // window == j // window)
+    else:
+        ok = jnp.ones((t, s), bool)
+    sc = jnp.where(ok[None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhts,bshd->bthd", p, vv)
+
+
+@pytest.mark.parametrize("kind,window", [("causal", 0), ("sliding", 7),
+                                         ("chunked", 16), ("full", 0)])
+@pytest.mark.parametrize("kv_block", [8, 16, 64])
+def test_blockwise_matches_naive(kind, window, kv_block):
+    q = rnd(1, (2, 48, 4, 16))
+    k = rnd(2, (2, 48, 2, 16))
+    v = rnd(3, (2, 48, 2, 16))
+    got = A.blockwise_attention(q, k, v, kind=kind, window=window,
+                                kv_block=kv_block)
+    want = naive(q, k, v, kind, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_rope_relative_shift_property():
+    """RoPE scores depend on relative distance: shifting all positions by a
+    constant leaves q.k dot products unchanged."""
+    x = rnd(4, (1, 8, 2, 32))
+    p0 = jnp.arange(8)[None]
+    r1 = A.apply_rope(x, p0, 1e4)
+    r2 = A.apply_rope(x, p0 + 100, 1e4)
+    s1 = jnp.einsum("bthd,bshd->bhts", r1, r1)
+    s2 = jnp.einsum("bthd,bshd->bhts", r2, r2)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-3)
+
+
+def test_gqa_decode_ring_buffer_sliding():
+    """Decode with a ring buffer must equal full-context SWA forward."""
+    cfg = reduced(get_config("mistral-nemo-12b"))
+    p = A.make_gqa(KEY, cfg, jnp.float32)
+    w = 8
+    s_total = 20
+    x = rnd(5, (1, s_total, cfg.d_model))
+    full = A.gqa_forward(p, x, cfg, kind="sliding", window=w)
+    cache = A.init_kv_cache(1, w, cfg.n_kv_heads, cfg.head_dim, jnp.float32)
+    outs = []
+    for t in range(s_total):
+        o, cache = A.gqa_decode(p, x[:, t:t + 1], cache, cfg,
+                                kind="sliding", window=w)
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mla_decode_matches_forward():
+    """Absorbed compressed-cache decode == lazy-upproject forward."""
+    cfg = get_config("deepseek-v2-236b")
+    cfg = reduced(cfg)
+    p = A.make_mla(KEY, cfg, jnp.float32)
+    s = 12
+    x = rnd(6, (2, s, cfg.d_model))
+    full = A.mla_forward(p, x, cfg)
+    cache = A.init_mla_cache(2, s + 2, cfg, jnp.float32)
+    outs = []
+    for t in range(s):
+        o, cache = A.mla_decode(p, x[:, t:t + 1], cache, cfg)
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_cross_attention_decode():
+    cfg = reduced(get_config("whisper-large-v3"))
+    p = A.make_gqa(KEY, cfg, jnp.float32)
+    enc = rnd(7, (2, 10, cfg.d_model))
+    x = rnd(8, (2, 1, cfg.d_model))
+    cross = A.precompute_cross_kv(p, enc, cfg)
+    o1 = A.gqa_cross_decode(p, x, cross, cfg)
+    o2 = A.gqa_forward(p, x, cfg, x_cross=enc)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,84 @@
+"""Gram/CKA math (paper Eqs. 1-2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cka as C
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+def test_gram_diagonal_is_one():
+    g = C.cosine_gram(_rand(0, (12, 7)))
+    np.testing.assert_allclose(np.diag(g), 1.0, atol=1e-5)
+
+
+def test_gram_symmetric_and_bounded():
+    g = np.asarray(C.cosine_gram(_rand(1, (20, 33))))
+    np.testing.assert_allclose(g, g.T, atol=1e-6)
+    assert (np.abs(g) <= 1.0 + 1e-5).all()
+
+
+def test_cka_self_is_one():
+    g = C.cosine_gram(_rand(2, (16, 8)))
+    assert abs(float(C.cka(g, g)) - 1.0) < 1e-6
+
+
+def test_cka_symmetric():
+    gx = C.cosine_gram(_rand(3, (10, 5)))
+    gy = C.cosine_gram(_rand(4, (10, 6)))
+    assert abs(float(C.cka(gx, gy)) - float(C.cka(gy, gx))) < 1e-6
+
+
+def test_cka_orthogonal_invariance():
+    """Rotating the embedding space leaves the cosine Gram unchanged —
+    the property that lets disjoint modalities align geometrically."""
+    x = _rand(5, (14, 14))
+    q, _ = jnp.linalg.qr(_rand(6, (14, 14)))
+    g1 = C.cosine_gram(x)
+    g2 = C.cosine_gram(x @ q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)
+
+
+def test_cka_scale_invariance():
+    x = _rand(7, (9, 21))
+    g = C.cosine_gram(x)
+    assert abs(float(C.cka(g, C.cosine_gram(3.7 * x))) - 1.0) < 1e-5
+
+
+def test_geo_loss_zero_at_consensus():
+    x = _rand(8, (8, 16))
+    g = C.cosine_gram(x)
+    assert float(C.geo_alignment_loss(x, g)) < 1e-6
+
+
+def test_geo_loss_positive_off_consensus():
+    x = _rand(9, (8, 16))
+    gbar = C.cosine_gram(_rand(10, (8, 16)))
+    assert float(C.geo_alignment_loss(x, gbar)) > 0.0
+
+
+def test_geo_loss_differentiable():
+    x = _rand(11, (8, 16))
+    gbar = C.cosine_gram(_rand(12, (8, 16)))
+    grad = jax.grad(lambda z: C.geo_alignment_loss(z, gbar))(x)
+    assert jnp.isfinite(grad).all() and float(jnp.abs(grad).max()) > 0
+
+
+def test_consensus_and_pairwise():
+    grams = jnp.stack([C.cosine_gram(_rand(i, (6, 4))) for i in range(3)])
+    gbar = C.consensus_gram(grams)
+    np.testing.assert_allclose(np.asarray(gbar),
+                               np.asarray(grams).mean(0), atol=1e-6)
+    pc = C.pairwise_cka(grams)
+    assert pc.shape == (3, 3)
+    np.testing.assert_allclose(np.diag(pc), 1.0, atol=1e-5)
+
+
+def test_centered_variant_runs():
+    gx = C.cosine_gram(_rand(13, (10, 5)))
+    v = float(C.cka(gx, gx, center=True))
+    assert abs(v - 1.0) < 1e-5

@@ -1,0 +1,125 @@
+"""GeoLoRA / GeoDoRA parameter machinery (paper Eqs. 3-5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lora as L
+from repro.models.common import (add_dora, add_lora, dora_column_norm,
+                                 linear, make_linear)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_lora_zero_b_is_identity():
+    lin = make_linear(KEY, 12, 20, jnp.float32)
+    lora = add_lora(jax.random.fold_in(KEY, 1), lin, 4, jnp.float32)
+    x = jax.random.normal(KEY, (5, 12))
+    np.testing.assert_allclose(np.asarray(linear(x, lin)),
+                               np.asarray(linear(x, lora)), atol=1e-6)
+
+
+def test_lora_matches_explicit_delta():
+    lin = make_linear(KEY, 8, 10, jnp.float32)
+    lora = add_lora(jax.random.fold_in(KEY, 2), lin, 3, jnp.float32)
+    lora["lora_B"] = jax.random.normal(jax.random.fold_in(KEY, 3), (3, 10))
+    x = jax.random.normal(KEY, (4, 8))
+    want = x @ lin["w"] + (x @ lora["lora_A"]) @ lora["lora_B"]
+    np.testing.assert_allclose(np.asarray(linear(x, lora)),
+                               np.asarray(want), rtol=1e-5)
+
+
+def test_dora_initial_decomposition_exact():
+    """m initialised to ||W||_c with B=0 => DoRA output == base output."""
+    lin = make_linear(KEY, 16, 12, jnp.float32)
+    d = add_dora(add_lora(jax.random.fold_in(KEY, 4), lin, 4, jnp.float32))
+    x = jax.random.normal(KEY, (6, 16))
+    np.testing.assert_allclose(np.asarray(linear(x, lin)),
+                               np.asarray(linear(x, d)), rtol=2e-5, atol=1e-5)
+
+
+def test_dora_column_norm_matches_materialised():
+    w = jax.random.normal(KEY, (10, 8))
+    a = jax.random.normal(jax.random.fold_in(KEY, 5), (10, 3))
+    b = jax.random.normal(jax.random.fold_in(KEY, 6), (3, 8))
+    want = jnp.linalg.norm(w + a @ b, axis=0)
+    got = dora_column_norm(w, a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4)
+
+
+def _toy_params():
+    k1, k2 = jax.random.split(KEY)
+    return {
+        "blocks": {"attn": {"wq": make_linear(k1, 8, 8, jnp.float32),
+                            "wo": make_linear(k2, 8, 8, jnp.float32)},
+                   "mlp": {"up": make_linear(k1, 8, 16, jnp.float32)}},
+        "embed": jax.random.normal(KEY, (32, 8)),
+    }
+
+
+def test_attach_targets_only():
+    p = L.attach_lora(KEY, _toy_params(), L.LoRASpec(rank=2))
+    assert "lora_A" in p["blocks"]["attn"]["wq"]
+    assert "lora_A" in p["blocks"]["attn"]["wo"]
+    assert "lora_A" not in p["blocks"]["mlp"]["up"]   # not a target
+
+
+def test_attach_stacked_layers():
+    lin = {"w": jax.random.normal(KEY, (4, 8, 10))}   # (L, d_in, d_out)
+    p = L.attach_lora(KEY, {"wq": lin}, L.LoRASpec(rank=2, dora=True))
+    assert p["wq"]["lora_A"].shape == (4, 8, 2)
+    assert p["wq"]["lora_B"].shape == (4, 2, 10)
+    assert p["wq"]["dora_m"].shape == (4, 10)
+
+
+def test_partition_combine_roundtrip():
+    p = L.attach_lora(KEY, _toy_params(), L.LoRASpec(rank=2, dora=True))
+    mask = L.trainable_mask(p)
+    train, frozen = L.partition(p, mask)
+    back = L.combine(train, frozen)
+    assert jax.tree.structure(back) == jax.tree.structure(p)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # only side-cars are trainable
+    names = []
+    def walk(node, name):
+        if isinstance(node, dict):
+            [walk(v, k) for k, v in node.items()]
+        elif node is not None:
+            names.append(name)
+    walk(train, "")
+    assert set(names) <= {"lora_B", "dora_m"}
+
+
+def test_merge_lora_equals_runtime():
+    p = L.attach_lora(KEY, _toy_params(), L.LoRASpec(rank=2))
+    p["blocks"]["attn"]["wq"]["lora_B"] = \
+        0.3 * jax.random.normal(KEY, (2, 8))
+    x = jax.random.normal(KEY, (3, 8))
+    live = linear(x, p["blocks"]["attn"]["wq"])
+    merged = L.merge_lora(p)
+    assert "lora_A" not in merged["blocks"]["attn"]["wq"]
+    folded = linear(x, merged["blocks"]["attn"]["wq"])
+    np.testing.assert_allclose(np.asarray(live), np.asarray(folded),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_merge_dora_equals_runtime():
+    p = L.attach_lora(KEY, _toy_params(), L.LoRASpec(rank=2, dora=True))
+    p["blocks"]["attn"]["wo"]["lora_B"] = \
+        0.5 * jax.random.normal(KEY, (2, 8))
+    p["blocks"]["attn"]["wo"]["dora_m"] = \
+        1.0 + 0.1 * jax.random.normal(KEY, (8,))
+    x = jax.random.normal(KEY, (3, 8))
+    live = linear(x, p["blocks"]["attn"]["wo"])
+    folded = linear(x, L.merge_lora(p)["blocks"]["attn"]["wo"])
+    np.testing.assert_allclose(np.asarray(live), np.asarray(folded),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_param_counts():
+    p = L.attach_lora(KEY, _toy_params(), L.LoRASpec(rank=2))
+    mask = L.trainable_mask(p)
+    train, _ = L.partition(p, mask)
+    n_train = L.count_params(train)
+    n_total = L.count_params(p)
+    assert 0 < n_train < 0.2 * n_total

@@ -1,0 +1,149 @@
+"""Mixer-level tests: MoE routing/capacity, Mamba + RG-LRU chunked scans."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.ssm import _chunked_diag_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_capacity_formula():
+    assert moe_mod._capacity(65536, 6, 160, 1.25) == 3072
+    assert moe_mod._capacity(2, 2, 4, 1.25) == 2        # floored: no drops
+    assert moe_mod._capacity(100, 1, 16, 1.25) == 8     # min floor 8
+
+
+def test_router_scores_and_aux():
+    cfg = reduced(get_config("deepseek-v2-236b"))
+    p = moe_mod.make_moe(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 8, cfg.d_model))
+    scores, idx, aux = moe_mod.router_scores(p, x, cfg)
+    m = cfg.moe
+    assert scores.shape == (2, 8, m.num_experts)
+    # exactly top_k nonzero scores per token, summing to 1
+    nz = (np.asarray(scores) > 0).sum(-1)
+    np.testing.assert_array_equal(nz, m.top_k)
+    np.testing.assert_allclose(np.asarray(scores).sum(-1), 1.0, atol=1e-5)
+    # balanced-uniform router => load_balance ~ 1
+    assert 0.5 < float(aux["load_balance"]) < 2.0
+
+
+def test_moe_matches_dense_expert_sum():
+    """With capacity high enough, the gather/scatter path equals the naive
+    dense per-expert computation."""
+    cfg = reduced(get_config("llama4-scout-17b-a16e"))
+    cfg = cfg.with_(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0,
+                                            num_shared_experts=0))
+    p = moe_mod.make_moe(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 6, cfg.d_model))
+    y, _ = moe_mod.moe_ffn(p, x, cfg)
+    scores, _, _ = moe_mod.router_scores(p, x, cfg)
+
+    def dense(x, scores):
+        out = jnp.zeros_like(x)
+        for e in range(cfg.moe.num_experts):
+            wg = p["experts"]["gate"]["w"][e]
+            wu = p["experts"]["up"]["w"][e]
+            wd = p["experts"]["down"]["w"][e]
+            h = jax.nn.silu(x @ wg) * (x @ wu)
+            out = out + (h @ wd) * scores[..., e:e + 1]
+        return out
+    want = dense(x, scores)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_moe_shared_expert_added():
+    cfg = reduced(get_config("deepseek-v2-236b"))
+    p = moe_mod.make_moe(KEY, cfg, jnp.float32)
+    assert "shared" in p
+    x = jax.random.normal(KEY, (1, 4, cfg.d_model))
+    y, _ = moe_mod.moe_ffn(p, x, cfg)
+    assert y.shape == x.shape
+
+
+# ----------------------------------------------------------------------
+def test_chunked_scan_matches_sequential():
+    def seq_scan(da, dbx, h0):
+        hs = []
+        h = h0
+        for t in range(da.shape[1]):
+            h = da[:, t] * h + dbx[:, t]
+            hs.append(h)
+        return jnp.stack(hs, 1), h
+    da = jax.random.uniform(KEY, (2, 21, 5), minval=0.2, maxval=0.99)
+    dbx = jax.random.normal(KEY, (2, 21, 5))
+    h0 = jax.random.normal(KEY, (2, 5))
+    for chunk in (4, 7, 21, 64):
+        h_all, h_last = _chunked_diag_scan(da, dbx, h0, chunk)
+        want_all, want_last = seq_scan(da, dbx, h0)
+        np.testing.assert_allclose(np.asarray(h_all), np.asarray(want_all),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(h_last), np.asarray(want_last),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_mamba_forward_decode_equivalence():
+    cfg = reduced(get_config("falcon-mamba-7b"))
+    p = ssm_mod.make_mamba(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 12, cfg.d_model))
+    y_full, state_full = ssm_mod.mamba_forward(p, x, cfg)
+    state = ssm_mod.init_mamba_state(2, cfg, jnp.float32)
+    ys = []
+    for t in range(12):
+        y, state = ssm_mod.mamba_decode(p, x[:, t:t + 1], state, cfg)
+        ys.append(y)
+    got = jnp.concatenate(ys, 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(y_full),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state["h"]),
+                               np.asarray(state_full["h"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mamba_forward_with_state_stitching():
+    """Processing a sequence in two halves with carried state == one pass
+    (the chunked-prefill invariant)."""
+    cfg = reduced(get_config("falcon-mamba-7b"))
+    p = ssm_mod.make_mamba(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (1, 16, cfg.d_model))
+    y_full, _ = ssm_mod.mamba_forward(p, x, cfg)
+    y1, st = ssm_mod.mamba_forward(p, x[:, :8], cfg)
+    y2, _ = ssm_mod.mamba_forward(p, x[:, 8:], cfg, h0=st["h"],
+                                  conv0=st["conv"])
+    got = jnp.concatenate([y1, y2], 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(y_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rglru_forward_decode_equivalence():
+    cfg = reduced(get_config("recurrentgemma-9b"))
+    p = rglru_mod.make_rglru_block(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 10, cfg.d_model))
+    y_full, _ = rglru_mod.rglru_forward(p, x, cfg)
+    state = rglru_mod.init_rglru_state(2, cfg, jnp.float32)
+    ys = []
+    for t in range(10):
+        y, state = rglru_mod.rglru_decode(p, x[:, t:t + 1], state, cfg)
+        ys.append(y)
+    got = jnp.concatenate(ys, 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(y_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rglru_stability():
+    """RG-LRU gate keeps |a| < 1 => bounded state over long sequences."""
+    cfg = reduced(get_config("recurrentgemma-9b"))
+    p = rglru_mod.make_rglru_block(KEY, cfg, jnp.float32)
+    x = 5.0 * jax.random.normal(KEY, (1, 256, cfg.d_model))
+    y, state = rglru_mod.rglru_forward(p, x, cfg)
+    assert bool(jnp.isfinite(y).all())
+    assert float(jnp.abs(state["h"]).max()) < 1e3

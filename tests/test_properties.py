@@ -1,0 +1,104 @@
+"""Hypothesis property tests on the system's invariants."""
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import aggregation as agg
+from repro.core import cka as C
+from repro.core import uncertainty as U
+
+SET = dict(max_examples=25, deadline=None)
+
+
+def arrays(shape, elements=st.floats(-3, 3, width=32)):
+    return hnp.arrays(np.float32, shape, elements=elements)
+
+
+# ----------------------------------------------------------------------
+# Paper Eq. 4 soundness: with a SHARED frozen A, averaging the B_k factors
+# equals averaging the full low-rank updates — exactly.
+@settings(**SET)
+@given(arrays((3, 4, 6)), arrays((8, 4)))
+def test_fixed_a_averaging_linearity(bs, a):
+    # B_k: (K=3, r=4, d_out=6); A: (d_in=8, r=4)
+    delta_each = np.stack([a @ b for b in bs])       # (3, 8, 6)
+    np.testing.assert_allclose(a @ bs.mean(0), delta_each.mean(0),
+                               rtol=1e-3, atol=1e-4)
+
+
+# Counter-property: with per-node A_k (heterogeneous, what FedIT does)
+# averaging B_k is NOT equivalent — motivating the frozen shared A.
+def test_heterogeneous_a_breaks_averaging():
+    rng = np.random.default_rng(0)
+    a_k = rng.standard_normal((3, 8, 4)).astype(np.float32)
+    b_k = rng.standard_normal((3, 4, 6)).astype(np.float32)
+    true_avg = np.mean([a @ b for a, b in zip(a_k, b_k)], axis=0)
+    naive = a_k.mean(0) @ b_k.mean(0)
+    assert np.abs(true_avg - naive).max() > 0.1
+
+
+@settings(**SET)
+@given(arrays((6, 5)))
+def test_cka_bounds(x):
+    g = np.asarray(C.cosine_gram(jnp.asarray(x) + 1e-3))
+    v = float(C.cka(g, g))
+    assert 0.999 <= v <= 1.001
+
+
+@settings(**SET)
+@given(arrays((7, 4)), st.floats(0.1, 10.0))
+def test_gram_sample_scale_invariance(x, s):
+    """Cosine kernel kills per-sample magnitude — the paper's motivation for
+    aligning direction not magnitude."""
+    x = x + 0.1  # avoid zero rows
+    g1 = np.asarray(C.cosine_gram(jnp.asarray(x)))
+    g2 = np.asarray(C.cosine_gram(jnp.asarray(x * s)))
+    np.testing.assert_allclose(g1, g2, atol=1e-4)
+
+
+@settings(**SET)
+@given(arrays((5, 8)), arrays((6, 8)))
+def test_lap_uncertainty_bounds(z, a):
+    u = np.asarray(U.lap_uncertainty(jnp.asarray(z + 1e-3),
+                                     jnp.asarray(a + 1e-3)))
+    assert (u >= -1e-6).all() and (u <= 1.0 + 1e-6).all()
+
+
+def test_lap_anchor_samples_are_certain():
+    a = jnp.asarray(np.random.default_rng(1).standard_normal((6, 8)),
+                    jnp.float32)
+    u = U.lap_uncertainty(a, a)
+    assert float(u.max()) < 1e-5
+
+
+@settings(**SET)
+@given(arrays((5,), st.floats(0.01, 100)))
+def test_precision_weights_normalised(p):
+    w = np.asarray(U.precision_weights(jnp.asarray(p)))
+    assert abs(w.sum() - 1.0) < 1e-5
+    assert (w >= 0).all()
+
+
+def test_precision_weights_monotone():
+    w = np.asarray(U.precision_weights(jnp.asarray([1.0, 2.0, 4.0])))
+    assert w[0] < w[1] < w[2]
+
+
+@settings(**SET)
+@given(arrays((4, 3, 5)))
+def test_fedavg_of_identical_is_identity(x):
+    trees = [{"w": jnp.asarray(x[0])} for _ in range(4)]
+    out = agg.fedavg(trees)
+    np.testing.assert_allclose(np.asarray(out["w"]), x[0], atol=1e-5)
+
+
+@settings(**SET)
+@given(arrays((3, 6)))
+def test_weighted_mean_extremes(x):
+    trees = [{"w": jnp.asarray(x[i])} for i in range(3)]
+    w = jnp.asarray([1.0, 0.0, 0.0])
+    out = agg.weighted_mean_trees(trees, w)
+    np.testing.assert_allclose(np.asarray(out["w"]), x[0], atol=1e-5)

@@ -1,0 +1,91 @@
+"""Roofline analysis: structural HLO collective parser + model FLOPs."""
+import textwrap
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.roofline import analysis as A
+
+HLO = textwrap.dedent("""\
+    HloModule jit_step, num_partitions=4
+
+    %add.1 (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %r = f32[] add(%a, %b)
+    }
+
+    %cond.1 (t: (s32[], f32[8,16])) -> pred[] {
+      %t = (s32[], f32[8,16]) parameter(0)
+      %i = s32[] get-tuple-element(%t), index=0
+      %n = s32[] constant(10)
+      ROOT %cmp = pred[] compare(%i, %n), direction=LT
+    }
+
+    %body.1 (t: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %t = (s32[], f32[8,16]) parameter(0)
+      %x = f32[8,16]{1,0} get-tuple-element(%t), index=1
+      %ar = f32[8,16]{1,0} all-reduce(%x), to_apply=%add.1
+      %ag = f32[32,16]{1,0} all-gather(%x), dimensions={0}
+      ROOT %out = (s32[], f32[8,16]) tuple(%t)
+    }
+
+    ENTRY %main.1 (p0: f32[8,16]) -> f32[8,16] {
+      %p0 = f32[8,16]{1,0} parameter(0)
+      %w = (s32[], f32[8,16]) while(%p0), condition=%cond.1, body=%body.1
+      %top = f32[4,4]{1,0} all-reduce(%p0), to_apply=%add.1
+      ROOT %r = f32[8,16]{1,0} get-tuple-element(%w), index=1
+    }
+""")
+
+
+def test_parser_counts_and_trip_multiplication():
+    out = A.parse_collectives(HLO)
+    # body all-reduce: 8*16*4 bytes * 2 (wire) * 10 trips = 10240
+    # entry all-reduce: 4*4*4 * 2 = 128
+    assert out["all-reduce"] == 8 * 16 * 4 * 2 * 10 + 4 * 4 * 4 * 2
+    # all-gather result 32*16*4 * 1 (wire) * 10 trips
+    assert out["all-gather"] == 32 * 16 * 4 * 10
+    assert out["_counts"]["all-reduce"] == 2
+    assert out["_counts"]["all-gather"] == 1
+
+
+def test_parser_tuple_results():
+    txt = HLO.replace(
+        "%ar = f32[8,16]{1,0} all-reduce(%x), to_apply=%add.1",
+        "%ar = (f32[8,16]{1,0}, bf16[4]{0}) all-reduce(%x, %x), "
+        "to_apply=%add.1")
+    out = A.parse_collectives(txt)
+    per = (8 * 16 * 4 + 4 * 2) * 2
+    assert out["all-reduce"] == per * 10 + 4 * 4 * 4 * 2
+
+
+def test_parser_ignores_done_ops():
+    txt = HLO.replace("%ar = f32[8,16]{1,0} all-reduce(%x), to_apply=%add.1",
+                      "%ar = f32[8,16]{1,0} all-reduce-done(%x)")
+    out = A.parse_collectives(txt)
+    assert out["_counts"]["all-reduce"] == 1      # only the entry one
+
+
+def test_shape_bytes_dtypes():
+    assert A._shape_bytes("bf16", "2,3") == 12
+    assert A._shape_bytes("f32", "5") == 20
+    assert A._shape_bytes("pred", "8") == 8
+    assert A._shape_bytes("s32", "") == 4         # scalar
+
+
+def test_model_flops_dense_vs_moe():
+    dense = get_config("yi-6b")
+    moe = get_config("deepseek-v2-236b")
+    tr = INPUT_SHAPES["train_4k"]
+    d = tr.global_batch * tr.seq_len
+    assert A.model_flops(dense, tr, training=True) == 6.0 * dense.param_count * d
+    # MoE uses ACTIVE params
+    got = A.model_flops(moe, tr, training=True)
+    assert got == 6.0 * moe.active_param_count * d
+    assert got < 6.0 * moe.param_count * d / 5
+
+
+def test_model_flops_decode():
+    cfg = get_config("yi-6b")
+    dec = INPUT_SHAPES["decode_32k"]
+    assert A.model_flops(cfg, dec, training=False) == \
+        2.0 * cfg.param_count * dec.global_batch

@@ -1,0 +1,91 @@
+"""Sharding rule engine: tp/fsdp/dp layouts, divisibility fallbacks,
+cache specs."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, reduced
+from repro.launch import shardings as shd
+from repro.models import transformer as T
+
+
+@pytest.fixture(scope="module")
+def mesh16():
+    # abstract rule checks only need mesh SHAPE; build a 1x1 real mesh is
+    # not enough for divisibility, so use AbstractMesh
+    return jax.sharding.AbstractMesh((4, 4), ("data", "model"))
+
+
+def _params(arch):
+    cfg = get_config(arch)
+    return jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def test_tp_rules_dense(mesh16):
+    p = _params("yi-6b")
+    specs = shd.param_specs(p, mesh16)
+    assert specs["embed"] == P("model", None)            # vocab 64000 % 4
+    assert specs["blocks"]["attn"]["wq"]["w"] == P(None, None, "model")
+    assert specs["blocks"]["attn"]["wo"]["w"] == P(None, "model", None)
+    assert specs["blocks"]["mlp"]["down"]["w"] == P(None, "model", None)
+    assert specs["final_norm"]["scale"] == P()
+
+
+def test_tp_rules_moe_experts(mesh16):
+    p = _params("deepseek-v2-236b")
+    specs = shd.param_specs(p, mesh16)
+    # experts (L, E, d, f): E over model, widest over data
+    e = specs["blocks"]["moe"]["experts"]["gate"]["w"]
+    assert e[1] == "model"
+    assert specs["blocks"]["moe"]["router"]["w"] == P()
+
+
+def test_fsdp_layout_contraction_dim(mesh16):
+    p = _params("yi-6b")
+    specs = shd.param_specs(p, mesh16, layout="fsdp")
+    # linears shard dim -2 over both axes
+    assert specs["blocks"]["mlp"]["up"]["w"] == \
+        P(None, ("data", "model"), None)
+    assert specs["embed"] == P(("data", "model"), None)
+
+
+def test_dp_layout_replicates(mesh16):
+    p = _params("smollm-135m")
+    specs = shd.param_specs(p, mesh16, layout="dp")
+    assert all(s == P() for s in jax.tree.leaves(specs)
+               if isinstance(s, P))
+
+
+def test_divisibility_fallback_logged(mesh16):
+    shd.reset_explain()
+    # 7 is not divisible by 4: replicate + log
+    leaf = jax.ShapeDtypeStruct((10, 7), jnp.float32)
+    spec = shd._leaf_spec(("blocks", "attn", "wq", "w"), leaf, mesh16)
+    assert spec == P()
+    assert any("col 7 % model" in m for m in shd.explain())
+
+
+def test_batch_dim_spec(mesh16):
+    assert shd.batch_dim_spec(mesh16, 8) == ("data",)    # 8 % 16 != 0 -> data
+    assert shd.batch_dim_spec(mesh16, 16) == ("data",)   # no pod axis ->
+    assert shd.batch_dim_spec(mesh16, 1) is None
+    assert shd.batch_dim_spec(mesh16, 16, data_axes=("data", "model")) == \
+        ("data", "model")
+
+
+def test_cache_specs_structure(mesh16):
+    cfg = reduced(get_config("recurrentgemma-9b"))
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, 4, 64))
+    specs = shd.cache_specs(cache, mesh16)
+    assert jax.tree.structure(
+        jax.tree.map(lambda _: 0, cache)) == jax.tree.structure(
+        jax.tree.map(lambda _: 0, specs))
+    assert specs["len"] == P()
+
+
+def test_cache_specs_mla(mesh16):
+    cfg = reduced(get_config("deepseek-v2-236b"))
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, 4, 64))
+    specs = shd.cache_specs(cache, mesh16)
+    assert specs["c_kv"][1] in ("data", ("data",))   # batch dim sharded
