@@ -1,0 +1,18 @@
+.PHONY: test bench bench-fed train-smoke
+
+# tier-1 verification (the CI entrypoint)
+test:
+	bash scripts/tier1.sh
+
+# paper-claim benchmark table
+bench:
+	PYTHONPATH=src python -m benchmarks.run --quick
+
+# sequential-loop vs node-stacked-engine round latency
+# (writes BENCH_federation.json)
+bench-fed:
+	PYTHONPATH=src python -m benchmarks.federation_round
+
+train-smoke:
+	PYTHONPATH=src python -m repro.launch.train --tiny --rounds 2 \
+		--local-steps 2 --batch 2 --seq 32 --anchors 6 --nodes 2

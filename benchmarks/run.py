@@ -181,6 +181,9 @@ def bench_geodora_magnitude_direction(quick: bool):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--fed-round", action="store_true",
+                    help="also run the sequential-vs-engine round-latency "
+                         "bench (writes BENCH_federation.json)")
     args, _ = ap.parse_known_args()
     print("name,us_per_call,derived")
     bench_comm_reduction()
@@ -190,6 +193,9 @@ def main() -> None:
     bench_kernels(args.quick)
     bench_precision_weighting(args.quick)
     bench_cka_alignment(args.quick)
+    if args.fed_round:
+        from benchmarks.federation_round import main as fed_round_main
+        fed_round_main()
 
 
 if __name__ == "__main__":

@@ -4,13 +4,25 @@ Each node holds ONE private modality (image / text / genetics / tabular);
 the public anchor set + Gram/CKA alignment pulls their latent geometries
 together while GeoLoRA keeps the per-round uplink low-rank-sized.
 
+Runs on the node-stacked engine by default: each round (all local epochs +
+the server step) is ONE compiled call.  Pass --sequential for the per-node
+reference loop the engine is equivalence-tested against.
+
     PYTHONPATH=src python examples/quickstart.py
 """
+import argparse
+
 from repro.configs import get_config
-from repro.core.federation import Federation, FederationConfig
+from repro.core.federation import (Federation, FederationConfig,
+                                   SequentialFederation)
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sequential", action="store_true",
+                    help="run the per-node Python-loop reference instead "
+                         "of the node-stacked engine")
+    args = ap.parse_args()
     model = get_config("fedmm-small").with_(
         n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
         d_ff=128, vocab_size=256, dtype="float32")
@@ -20,9 +32,10 @@ def main():
         method="geodora",             # Eq. 5: direction shared, magnitude local
         aggregation="precision",      # Eq. 6: LAP-weighted server averaging
         rounds=4, local_steps=8, local_batch=32, lambda_geo=1.0)
+    cls = SequentialFederation if args.sequential else Federation
     print(f"federation: {fed.n_nodes} nodes, one modality each, "
-          f"method={fed.method}")
-    f = Federation(fed, model)
+          f"method={fed.method}, engine={cls.__name__}")
+    f = cls(fed, model)
     for r in range(fed.rounds):
         rec = f.run_round()
         print(f"round {r}: task={rec['task_loss']:.3f} "

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the repo's own test suite on CPU.
+# Usage: scripts/tier1.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+exec python -m pytest -x -q "$@"

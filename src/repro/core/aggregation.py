@@ -48,6 +48,25 @@ def aggregate_geolora(node_trainables: Sequence,
     return weighted_mean_trees(node_trainables, weights)
 
 
+def weighted_average_stacked(stacked, weights: Array, shipped_mask):
+    """Server step on node-STACKED trees (Eqs. 4-6 in one pass): leaves
+    marked shipped are precision-weight-averaged along the leading node axis
+    and broadcast back to every node; node-local leaves (adapters W_mk) pass
+    through untouched.  ``shipped_mask`` is a static bool pytree matching
+    ``stacked`` (``None`` placeholders align)."""
+    w = weights.astype(jnp.float32)
+
+    def avg(leaf, shipped):
+        if leaf is None or not shipped:
+            return leaf
+        a = jnp.tensordot(w, leaf.astype(jnp.float32),
+                          axes=1).astype(leaf.dtype)
+        return jnp.broadcast_to(a[None], leaf.shape)
+
+    return jax.tree.map(avg, stacked, shipped_mask,
+                        is_leaf=lambda x: x is None)
+
+
 def comm_bytes_per_round(trainable_tree, gram_side: int = 0) -> int:
     """Uplink bytes a node ships per round under the paper's protocol:
     the trainable side-cars + the B x B Gram matrix (f32)."""

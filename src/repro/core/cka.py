@@ -72,3 +72,11 @@ def pairwise_cka(grams: Array, *, center: bool = False) -> Array:
     fn = jax.vmap(jax.vmap(lambda a, b: cka(a, b, center=center),
                            (None, 0)), (0, None))
     return fn(grams, grams)
+
+
+def mean_offdiag_cka(grams: Array, *, center: bool = False) -> Array:
+    """Mean off-diagonal pairwise CKA over K node Grams — the per-round
+    cross-modality alignment metric reported by the federation drivers."""
+    k = grams.shape[0]
+    pair = pairwise_cka(grams, center=center)
+    return (pair.sum() - jnp.trace(pair)) / max(k * (k - 1), 1)

@@ -16,6 +16,37 @@ Adapters W_mk never leave the node; the frozen base theta is never
 communicated after initialisation.  Communication per round is measured and
 compared against full-model FedAvg in the benchmarks (paper claim: >99.9%
 reduction).
+
+Execution engine
+----------------
+Two implementations share one substrate:
+
+``SequentialFederation`` — the readable reference: a Python loop over nodes
+and local steps, one jit dispatch per node per step (K x E per round).
+Kept as the oracle for the engine-equivalence tests and benchmarks.
+
+``Federation`` — the node-stacked engine (``repro.core.engine``), the
+default.  Architecture:
+
+  * **node axis**: per-node trainables, optimizer states and RNG keys are
+    stacked along a leading axis of size K; ``jax.vmap`` maps the local
+    step across it and ``jax.lax.scan`` runs the E local steps.
+  * **padding strategy**: heterogeneous per-modality widths (tokenizer
+    ``d_out`` differs per node) are zero-padded to the max width.  Padded
+    token channels are exactly zero, so padded adapter rows receive zero
+    gradients and stay zero under AdamW (no weight decay) — the padded
+    program is numerically equivalent to the ragged one.  Heterogeneous
+    node *types* (corrupt / bridge / synthetic-anchor) are static branch
+    masks: both data branches are computed from the same RNG keys and
+    selected per node, and the bridge contrastive term is weighted by a
+    0/1 mask, so ONE compiled program serves every node type.
+  * **round compilation boundary**: local epochs + Gram upload + LAP
+    precision + consensus + precision-weighted side-car averaging +
+    broadcast are one jitted call — K x E dispatches per round become 1.
+  * **mesh path**: with ``mesh=...`` the node axis is ``shard_map``-ped
+    onto the mesh batch axes (``launch.mesh.batch_axes``); the server step
+    becomes psum/all_gather collectives whose payload is the protocol's
+    actual uplink (Grams, precisions, shipped side-cars).
 """
 from __future__ import annotations
 
@@ -29,6 +60,7 @@ import jax.numpy as jnp
 from repro.configs import ModelConfig, get_config
 from repro.core import aggregation as agg
 from repro.core import cka as cka_mod
+from repro.core import engine as engine_mod
 from repro.core import lora as lora_mod
 from repro.core import uncertainty as unc
 from repro.data.synthetic import SyntheticMultimodal
@@ -83,19 +115,8 @@ def _stopgrad_named(tree, names=("dora_m",)):
     return walk(tree, "")
 
 
-def _shipped_mask(trainable):
-    """True for side-cars shipped to the server (lora_B/dora_m/cls_head),
-    False for node-local params (adapter W_mk)."""
-    def walk(node, name, local):
-        local = local or name in lora_mod.LOCAL_SUBTREES
-        if isinstance(node, dict):
-            return {k: walk(v, k, local) for k, v in node.items()}
-        if isinstance(node, (list, tuple)):
-            return type(node)(walk(v, name, local) for v in node)
-        if node is None:
-            return None
-        return not local
-    return walk(trainable, "", False)
+# shipped/local split lives in repro.core.lora (shared with the engine)
+_shipped_mask = lora_mod.shipped_mask
 
 
 def _split_by_mask(tree, mask):
@@ -112,9 +133,11 @@ def _merge_by_mask(shipped, local, mask):
         is_leaf=lambda x: x is None)
 
 
-class Federation:
-    """Simulated federation (K nodes on one host). The multi-pod SPMD
-    mapping of the same protocol lives in repro.launch."""
+class SequentialFederation:
+    """Simulated federation (K nodes on one host), sequential reference:
+    Python loop over nodes, one jit dispatch per node per local step.  The
+    node-stacked single-dispatch engine is ``Federation``; this class is
+    the oracle it is equivalence-tested against."""
 
     def __init__(self, fed: FederationConfig, model: ModelConfig = None):
         self.fed = fed
@@ -357,9 +380,7 @@ class Federation:
             node["trainable"] = _merge_by_mask(merged, node["trainable"],
                                                node["_smask"])
 
-        pair_cka = cka_mod.pairwise_cka(grams, center=fed.center_cka)
-        off_diag = (pair_cka.sum() - jnp.trace(pair_cka)) \
-            / max(fed.n_nodes * (fed.n_nodes - 1), 1)
+        off_diag = cka_mod.mean_offdiag_cka(grams, center=fed.center_cka)
         shipped_bytes = agg.comm_bytes_per_round(
             shipped_list[0], gram_side=self.gbar.shape[0])
         full_bytes = lora_mod.param_bytes(
@@ -415,3 +436,262 @@ class Federation:
     def node_params(self, i: int) -> dict:
         return lora_mod.combine(self.nodes[i]["trainable"],
                                 self._frozen_for(self.nodes[i]))
+
+
+class Federation(SequentialFederation):
+    """Node-stacked federation: a thin wrapper over
+    ``repro.core.engine.RoundEngine``.  One round — E vmapped local epochs
+    plus the whole server step — is a single jitted call; pass ``mesh=`` to
+    shard the node axis over the mesh batch axes (see the module docstring
+    for the architecture).  Public API and history records match the
+    sequential reference; per-node views in ``self.nodes`` are materialised
+    lazily (unpadded) from the stacked state on access.  Checkpoints store
+    the STACKED server state and are engine-to-engine only — not loadable
+    into a ``SequentialFederation`` (whose checkpoints are per-node)."""
+
+    def __init__(self, fed: FederationConfig, model: ModelConfig = None, *,
+                 mesh=None):
+        super().__init__(fed, model)
+        self._build_engine(mesh)
+
+    # self.nodes is a lazily refreshed VIEW of the stacked state: rounds
+    # only mark it stale, so the hot loop never pays K x n_leaves of
+    # per-node slicing unless someone actually reads the views.
+    @property
+    def nodes(self):
+        if getattr(self, "_views_stale", False):
+            self._views_stale = False
+            self._refresh_node_views()
+        return self._nodes
+
+    @nodes.setter
+    def nodes(self, value):
+        self._nodes = value
+
+    # ------------------------------------------------------------------
+    def _build_engine(self, mesh) -> None:
+        fed = self.fed
+        self._has_bridges = any(n.get("bridge") for n in self.nodes)
+        self._d_max = max(t.d_out for t in self.tokenizers.values())
+        d_model = self.cfg.d_model
+
+        # ---- node-stacked state (padding-to-max-width, see module doc) ----
+        trees = []
+        for node in self.nodes:
+            t = dict(node["trainable"])
+            t["adapter"] = {"w": engine_mod.pad_axis(
+                t["adapter"]["w"], self._d_max, 0)}
+            if self._has_bridges:
+                if node.get("bridge"):
+                    t["adapter2"] = {"w": engine_mod.pad_axis(
+                        t["adapter2"]["w"], self._d_max, 0)}
+                else:
+                    # inert slot: the masked contrastive term gives it
+                    # exactly-zero grads and it is never shipped, but it
+                    # must be NONZERO — a zero adapter makes pooled2 the
+                    # zero vector, whose norm has a NaN gradient that
+                    # poisons the whole node even under a 0.0 mask
+                    t["adapter2"] = {"w": engine_mod.pad_axis(make_linear(
+                        jax.random.fold_in(node["key"], 4242),
+                        self.tokenizers[node["modality"]].d_out, d_model,
+                        jnp.float32)["w"], self._d_max, 0)}
+            trees.append(t)
+        self._train = engine_mod.stack_nodes(trees)
+        self._opt_state = jax.vmap(self.opt.init)(self._train)
+        self._keys = jnp.stack([n["key"] for n in self.nodes])
+
+        # ---- per-node compile-time constants ----
+        anchors, tw1, tw2, tb1, mw, mb = [], [], [], [], [], []
+        for i, node in enumerate(self.nodes):
+            m = node["modality"]
+            a = (self.synthetic_anchor_tokens[m]
+                 if i in fed.synthetic_anchor_nodes
+                 else self.anchor_tokens[m])
+            anchors.append(engine_mod.pad_axis(a, self._d_max, -1))
+            w1, b1, w2 = self.tokenizers[m].padded_weights(self._d_max)
+            tw1.append(w1), tb1.append(b1), tw2.append(w2)
+            w, b = self.task.modality_map(m)
+            mw.append(w), mb.append(b)
+        statics = {
+            "anchors": jnp.stack(anchors),
+            "tok_w1": jnp.stack(tw1), "tok_b1": jnp.stack(tb1),
+            "tok_w2": jnp.stack(tw2),
+            "mod_w": jnp.stack(mw), "mod_b": jnp.stack(mb),
+            "corrupt": jnp.array([bool(n["corrupt"]) for n in self.nodes]),
+        }
+        if self._has_bridges:
+            b2w1, b2b1, b2w2, m2w, m2b = [], [], [], [], []
+            for node in self.nodes:
+                m2 = node.get("modality2", node["modality"])
+                w1, b1, w2 = self.tokenizers[m2].padded_weights(self._d_max)
+                b2w1.append(w1), b2b1.append(b1), b2w2.append(w2)
+                w, b = self.task.modality_map(m2)
+                m2w.append(w), m2b.append(b)
+            statics.update({
+                "bridge": jnp.array([1.0 if n.get("bridge") else 0.0
+                                     for n in self.nodes], jnp.float32),
+                "tok2_w1": jnp.stack(b2w1), "tok2_b1": jnp.stack(b2b1),
+                "tok2_w2": jnp.stack(b2w2),
+                "mod2_w": jnp.stack(m2w), "mod2_b": jnp.stack(m2b),
+            })
+        self._statics = statics
+
+        # comm accounting (constant across rounds; matches the reference,
+        # computed from node 0's UNpadded view)
+        smask0 = _shipped_mask(self.nodes[0]["trainable"])
+        shipped0, _ = _split_by_mask(self.nodes[0]["trainable"], smask0)
+        self._uplink_bytes = int(agg.comm_bytes_per_round(
+            shipped0, gram_side=self.gbar.shape[0]))
+        self._full_bytes = int(lora_mod.param_bytes(lora_mod.combine(
+            self.nodes[0]["trainable"], self._frozen_for(self.nodes[0]))))
+
+        ecfg = engine_mod.EngineConfig(
+            n_nodes=fed.n_nodes, local_steps=fed.local_steps,
+            aggregation=fed.aggregation, center_cka=fed.center_cka)
+        self.engine = engine_mod.RoundEngine(
+            ecfg, self.opt, self._make_local_step(),
+            _shipped_mask(self._train), mesh=mesh)
+
+    # ------------------------------------------------------------------
+    def _make_local_step(self):
+        """Per-node local step (runs under vmap over the node axis inside
+        the engine's scan).  Reproduces the sequential reference exactly:
+        same RNG splits, same corrupt/bridge draws, same loss terms."""
+        fed, cfg, opt = self.fed, self.cfg, self.opt
+        protos = self.task.prototypes()
+        n, d_raw = fed.local_batch, self.task.d_raw
+        d_lat, noise = self.task.d_latent, self.task.noise
+        log_probs = jnp.log(jnp.full((fed.n_classes,), 1.0 / fed.n_classes))
+        has_bridges = self._has_bridges
+        frozen = self.frozen_bridge if has_bridges else self.frozen
+        lam, lam_b, center = fed.lambda_geo, fed.lambda_bridge, fed.center_cka
+
+        def tokenize(raw, w1, b1, w2):
+            h = jnp.einsum("nd,dlo->nlo", raw.astype(jnp.float32), w1) + b1
+            return jnp.tanh(h) @ w2
+
+        def pooled_of(params, tokens):
+            embeds = linear(tokens.astype(jnp.float32), params["adapter"])
+            _, aux = T.forward(params, {"inputs_embeds": embeds}, cfg)
+            return aux["pooled"]
+
+        def sample(kb, st):
+            # both branches from the SAME keys as the reference's
+            # task.sample(...), selected by the static corrupt mask
+            k1, k2, k3 = jax.random.split(kb, 3)
+            labels_c = jax.random.categorical(k1, log_probs, shape=(n,))
+            latent = protos[labels_c] \
+                + noise * jax.random.normal(k2, (n, d_lat))
+            out_noise = 0.05 * jax.random.normal(k3, (n, d_raw))
+            raw_c = jnp.tanh(latent @ st["mod_w"] + st["mod_b"]) + out_noise
+            raw_x = jax.random.normal(k2, (n, d_raw))
+            labels_x = jax.random.randint(k1, (n,), 0, fed.n_classes)
+            raw = jnp.where(st["corrupt"], raw_x, raw_c)
+            labels = jnp.where(st["corrupt"], labels_x, labels_c)
+            # bridge pair: identical latent + output-noise draws through the
+            # second modality map (the reference re-samples with the same kb)
+            raw2 = (jnp.tanh(latent @ st["mod2_w"] + st["mod2_b"]) + out_noise
+                    if has_bridges else None)
+            return raw, labels, raw2
+
+        def local_step(train, opt_state, key, gbar, st, _batch):
+            key, kb = jax.random.split(key)
+            raw, labels, raw2 = sample(kb, st)
+            tokens = tokenize(raw, st["tok_w1"], st["tok_b1"], st["tok_w2"])
+
+            def loss_fn(tr):
+                params = lora_mod.combine(tr, frozen)
+                pooled = pooled_of(params, tokens)
+                logits = linear(pooled, params["cls_head"])
+                task = cross_entropy_loss(logits, labels)
+                loss = task
+                if has_bridges:
+                    tokens2 = tokenize(raw2, st["tok2_w1"], st["tok2_b1"],
+                                       st["tok2_w2"])
+                    params2 = dict(params, adapter=params["adapter2"])
+                    pooled2 = pooled_of(params2, tokens2)
+                    loss = loss + lam_b * st["bridge"] * \
+                        SequentialFederation._contrastive(pooled, pooled2)
+                params_geo = lora_mod.combine(_stopgrad_named(tr), frozen)
+                pooled_a = pooled_of(params_geo, st["anchors"])
+                geo = cka_mod.geo_alignment_loss(pooled_a, gbar,
+                                                 center=center)
+                acc = (logits.argmax(-1) == labels).mean()
+                return loss + lam * geo, (task, geo, acc, pooled, pooled_a)
+
+            grads, (task, geo, acc, pooled, pooled_a) = \
+                jax.grad(loss_fn, has_aux=True)(train)
+            new_train, new_opt = opt.update(grads, opt_state, train)
+            return new_train, new_opt, key, {
+                "task": task, "geo": geo, "acc": acc,
+                "pooled": pooled, "pooled_a": pooled_a}
+
+        return local_step
+
+    # ------------------------------------------------------------------
+    def run_round(self) -> dict:
+        (self._train, self._opt_state, self._keys, self.gbar, metrics) = \
+            self.engine.round_fn(self._train, self._opt_state, self._keys,
+                                 self.gbar, self._statics, None)
+        s = metrics["scalars"]
+        rec = {
+            "task_loss": float(jnp.mean(s["task"])),
+            "geo_loss": float(jnp.mean(s["geo"])),
+            "acc": float(jnp.mean(s["acc"])),
+            "cross_node_cka": float(metrics["cross_node_cka"]),
+            "weights": [float(w) for w in metrics["weights"]],
+            "uplink_bytes": self._uplink_bytes,
+            "full_model_bytes": self._full_bytes,
+        }
+        self._views_stale = True
+        self.history.append(rec)
+        return rec
+
+    def _unpad_node_tree(self, tree: dict, node: dict) -> dict:
+        """Strip the padded widths from one node's slice of a stacked tree
+        (trainables or AdamW moments), restoring the reference's ragged
+        per-node structure."""
+        tree = dict(tree)
+        d = self.tokenizers[node["modality"]].d_out
+        tree["adapter"] = {"w": tree["adapter"]["w"][:d]}
+        if "adapter2" in tree:
+            if node.get("bridge"):
+                d2 = self.tokenizers[node["modality2"]].d_out
+                tree["adapter2"] = {"w": tree["adapter2"]["w"][:d2]}
+            else:
+                del tree["adapter2"]
+        return tree
+
+    def _refresh_node_views(self) -> None:
+        """Materialise per-node (unpadded) views of the stacked state so
+        ``self.nodes`` / ``node_params`` keep the reference's shapes."""
+        for i, node in enumerate(self._nodes):
+            node["trainable"] = self._unpad_node_tree(
+                jax.tree.map(lambda x: x[i], self._train), node)
+            opt_i = jax.tree.map(lambda x: x[i], self._opt_state)
+            node["opt_state"] = {
+                "m": self._unpad_node_tree(opt_i["m"], node),
+                "v": self._unpad_node_tree(opt_i["v"], node),
+                "step": opt_i["step"],
+            }
+            node["key"] = self._keys[i]
+
+    # ------------------------------------------------------------------
+    # checkpointing: engine checkpoints store the STACKED server state
+    def save(self, path: str) -> None:
+        from repro.checkpoint import save_checkpoint
+        state = {"gbar": self.gbar, "train": self._train,
+                 "opt": self._opt_state, "keys": self._keys}
+        save_checkpoint(path, state, step=len(self.history))
+
+    def restore(self, path: str) -> int:
+        from repro.checkpoint import load_checkpoint
+        like = {"gbar": self.gbar, "train": self._train,
+                "opt": self._opt_state, "keys": self._keys}
+        state, step = load_checkpoint(path, like)
+        self.gbar = state["gbar"]
+        self._train = state["train"]
+        self._opt_state = state["opt"]
+        self._keys = state["keys"]
+        self._views_stale = True
+        return step

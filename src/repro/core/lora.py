@@ -91,6 +91,22 @@ def trainable_mask(params, extra_subtrees: Tuple[str, ...] = ()) -> dict:
     return walk(params, "", False)
 
 
+def shipped_mask(trainable) -> dict:
+    """Bool pytree over a trainable tree: True for side-cars shipped to the
+    server each round (lora_B / dora_m / shared heads), False for node-local
+    params (the W_mk adapters, paper: 'never leave the node')."""
+    def walk(node, name, local):
+        local = local or name in LOCAL_SUBTREES
+        if isinstance(node, dict):
+            return {k: walk(v, k, local) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, name, local) for v in node)
+        if node is None:
+            return None
+        return not local
+    return walk(trainable, "", False)
+
+
 def partition(params, mask):
     """Split params into (trainable, frozen) trees with None placeholders."""
     train = jax.tree.map(lambda p, m: p if m else None, params, mask,

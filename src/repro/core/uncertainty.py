@@ -30,6 +30,13 @@ def node_precision(uncertainties: Array, floor: float = 1e-3) -> Array:
     return (1.0 / jnp.maximum(uncertainties, floor)).mean()
 
 
+def batched_precisions(pooled_samples: Array, pooled_anchors: Array) -> Array:
+    """Node-stacked LAP precisions: (K, N, D), (K, B, D) -> (K,)
+    unnormalised p_k, the vmapped form the round engine uploads."""
+    u = jax.vmap(lap_uncertainty)(pooled_samples, pooled_anchors)
+    return jax.vmap(node_precision)(u)
+
+
 def precision_weights(node_precisions: Array) -> Array:
     """Server: normalise per-node precisions into aggregation weights
     (the paper's 1/E factor)."""

@@ -40,6 +40,12 @@ class SyntheticMultimodal:
         k, *_ = self._keys()
         return jax.random.normal(k, (self.n_classes, self.d_latent))
 
+    def modality_map(self, modality: str):
+        """Public accessor for the fixed modality map (w, b) — the
+        node-stacked engine bakes these in as per-node constants so data
+        sampling can run inside the compiled round."""
+        return self._modality_map(modality)
+
     def _modality_map(self, modality: str):
         _, k, *_ = self._keys()
         km = jax.random.fold_in(k, hash(modality) % (2 ** 31))

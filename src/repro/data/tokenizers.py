@@ -44,6 +44,21 @@ class FrozenTokenizer:
         h = jnp.einsum("nd,dlo->nlo", raw.astype(jnp.float32), w1) + b1
         return jnp.tanh(h) @ w2                      # (N, L, d_out)
 
+    def padded_weights(self, width: int):
+        """Weights zero-padded to token width ``width`` >= d_out, for the
+        node-stacked engine (one program over heterogeneous tokenizers).
+        Zero padding is exact: padded inputs stay 0 through tanh, padded
+        w2 rows/cols contribute 0, so outputs match the unpadded tokenizer
+        on the first d_out channels and are 0 beyond."""
+        w1, b1, w2 = self._weights()
+        pad = width - self.d_out
+        if pad < 0:
+            raise ValueError(f"width {width} < d_out {self.d_out}")
+        w1 = jnp.pad(w1, ((0, 0), (0, 0), (0, pad)))
+        b1 = jnp.pad(b1, ((0, 0), (0, pad)))
+        w2 = jnp.pad(w2, ((0, pad), (0, pad)))
+        return w1, b1, w2
+
 
 def default_tokenizers(modality_dims: dict, d_raw: int, n_tokens: int = 16,
                        seed: int = 0) -> dict:

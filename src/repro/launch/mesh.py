@@ -20,6 +20,19 @@ def make_local_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_abstract_mesh(shape, axes):
+    """Version-compat AbstractMesh constructor.
+
+    jax >= 0.5 takes ``AbstractMesh(axis_sizes, axis_names)``; jax <= 0.4.x
+    takes a single tuple of ``(name, size)`` pairs.  Abstract meshes carry
+    only shape/name information — exactly what the sharding rule engine and
+    its tests need without touching device state."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
+
+
 def batch_axes(mesh) -> tuple:
     return tuple(a for a in ("pod", "data") if a in mesh.shape)
 

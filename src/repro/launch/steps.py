@@ -2,7 +2,8 @@
 
 ``make_fed_train_step`` is the paper's federated round as one SPMD program
 (FedSGD form: one local step + precision-weighted aggregation — the
-multi-local-step divergent form runs in ``launch/train.py``):
+multi-local-step divergent form runs on the node-stacked round engine,
+``repro.core.engine.RoundEngine``, via ``launch/train.py``):
 
   - the mesh batch axes ("pod","data") carry the K federated nodes
     (one node per slice, node k's samples are batch rows k*b_loc:(k+1)*b_loc);

@@ -1,4 +1,8 @@
 """Hypothesis property tests on the system's invariants."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax

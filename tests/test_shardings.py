@@ -7,14 +7,16 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, reduced
 from repro.launch import shardings as shd
+from repro.launch.mesh import make_abstract_mesh
 from repro.models import transformer as T
 
 
 @pytest.fixture(scope="module")
 def mesh16():
     # abstract rule checks only need mesh SHAPE; build a 1x1 real mesh is
-    # not enough for divisibility, so use AbstractMesh
-    return jax.sharding.AbstractMesh((4, 4), ("data", "model"))
+    # not enough for divisibility, so use AbstractMesh (via the
+    # version-compat constructor — the signature changed across jax releases)
+    return make_abstract_mesh((4, 4), ("data", "model"))
 
 
 def _params(arch):
