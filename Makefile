@@ -1,4 +1,4 @@
-.PHONY: test bench bench-fed train-smoke
+.PHONY: test bench bench-fed bench-fed-smoke train-smoke
 
 # tier-1 verification (the CI entrypoint)
 test:
@@ -12,6 +12,10 @@ bench:
 # (writes BENCH_federation.json)
 bench-fed:
 	PYTHONPATH=src python -m benchmarks.federation_round
+
+# tiny-config bench harness smoke (the CI invocation)
+bench-fed-smoke:
+	PYTHONPATH=src python -m benchmarks.federation_round --smoke
 
 train-smoke:
 	PYTHONPATH=src python -m repro.launch.train --tiny --rounds 2 \

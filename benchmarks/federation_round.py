@@ -1,18 +1,23 @@
-"""Round-latency benchmark: sequential per-node loop vs node-stacked engine.
+"""Round-latency benchmark: sequential per-node loop vs node-stacked engine,
+plus the width-bucketed vs pad-to-max-width engine layouts.
 
 The sequential reference dispatches one jitted step per node per local step
 (K x E per round) and tokenizes each batch eagerly on the host; the engine
-runs the whole round — E vmapped local epochs + the server step — as ONE
-compiled call.  This bench measures wall-clock per round for both at
-K in {4, 8, 16} and writes ``BENCH_federation.json``.
+runs the whole round — vmapped local epochs per width bucket + the server
+step — as ONE compiled call with donated round-state buffers.  This bench
+measures wall-clock per round for both at K in {4, 8, 16} and writes
+``BENCH_federation.json``.
 
-The K sweep uses the width-matched image+text modality pair (1024/2048-dim
-tokenizers), which isolates round-orchestration cost.  A separate
-``mixed_width`` row runs the full 4-modality mix (192..2048-dim) where the
-engine pays the padding-to-max-width tax for narrow-modality nodes — the
-known cost of serving heterogeneous widths from one compiled program.
+The K sweep uses the image+text modality pair; the ``mixed_width`` row runs
+the full 4-modality mix (192..2048-dim tokenizers) and compares the legacy
+single-bucket layout (every node padded to 2048, narrow nodes paying the
+quadratic w^2 padding tax) against width bucketing, which groups nodes by
+tokenizer width inside the same single-dispatch round.  A peak-memory
+column (XLA ``memory_analysis`` on the compiled round) reports the
+round-state donation savings: donated buffers alias outputs onto inputs,
+so peak round-state memory stays ~1x instead of 2x.
 
-Run: PYTHONPATH=src python -m benchmarks.federation_round [--quick]
+Run: PYTHONPATH=src python -m benchmarks.federation_round [--quick|--smoke]
 """
 from __future__ import annotations
 
@@ -29,6 +34,7 @@ TINY = get_config("fedmm-small").with_(
     d_ff=128, vocab_size=256, dtype="float32")
 
 LOCAL_STEPS = 4
+MIXED_MODALITIES = ("image", "text", "genetics", "tabular")
 
 
 def _fedcfg(k: int, modalities) -> FederationConfig:
@@ -48,6 +54,16 @@ def _time_rounds(f, rounds: int) -> float:
         f.run_round()
         best = min(best, time.perf_counter() - t0)
     return best * 1e3
+
+
+def _peak_bytes(f: Federation) -> int:
+    """Estimated peak live bytes of one compiled round: arguments + outputs
+    + XLA temporaries, minus the donated input/output aliases."""
+    args = (f._trains, f._opts, f._keys, f.gbar, f._staticss,
+            (None,) * len(f._trains))
+    ma = f.engine.round_fn.lower(*args).compile().memory_analysis()
+    return int(ma.argument_size_in_bytes + ma.output_size_in_bytes
+               + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
 
 
 def bench_cfg(name: str, k: int, modalities, rounds: int) -> dict:
@@ -72,27 +88,84 @@ def bench_cfg(name: str, k: int, modalities, rounds: int) -> dict:
     return row
 
 
+def bench_mixed_bucketed(name: str, k: int, modalities, rounds: int) -> dict:
+    """Padded (single-bucket, pad-to-max-width) vs width-bucketed engine on
+    a heterogeneous-width modality mix, plus the donation memory column."""
+    fedcfg = _fedcfg(k, modalities)
+    seq_ms = _time_rounds(SequentialFederation(fedcfg, TINY), rounds)
+
+    padded = Federation(fedcfg, TINY, width_bucketing=False)
+    padded_peak = _peak_bytes(padded)
+    padded_ms = _time_rounds(padded, rounds)
+
+    bucketed = Federation(fedcfg, TINY)
+    bucketed_peak = _peak_bytes(bucketed)
+    no_donate_peak = _peak_bytes(Federation(fedcfg, TINY, donate=False))
+    bucketed_ms = _time_rounds(bucketed, rounds)
+
+    row = {
+        "name": name,
+        "k_nodes": k,
+        "modalities": list(modalities),
+        "local_steps": LOCAL_STEPS,
+        "bucket_widths": list(bucketed._bucket_widths),
+        "sequential_ms_per_round": round(seq_ms, 2),
+        "padded_engine_ms_per_round": round(padded_ms, 2),
+        "engine_ms_per_round": round(bucketed_ms, 2),
+        "speedup": round(seq_ms / bucketed_ms, 2),
+        "padded_speedup": round(seq_ms / padded_ms, 2),
+        "bucketed_vs_padded": round(padded_ms / bucketed_ms, 2),
+        "sequential_dispatches_per_round": k * LOCAL_STEPS,
+        "engine_dispatches_per_round": 1,
+        # donation column: peak live bytes of the compiled round
+        "peak_bytes_donated": bucketed_peak,
+        "peak_bytes_no_donation": no_donate_peak,
+        "donation_saved_bytes": no_donate_peak - bucketed_peak,
+        "padded_peak_bytes_donated": padded_peak,
+    }
+    print(f"{name} K={k}: sequential={seq_ms:.1f}ms padded={padded_ms:.1f}ms "
+          f"bucketed={bucketed_ms:.1f}ms "
+          f"(bucketed vs padded {row['bucketed_vs_padded']}x, "
+          f"vs sequential {row['speedup']}x) "
+          f"peak {bucketed_peak/1e6:.1f}MB donated vs "
+          f"{no_donate_peak/1e6:.1f}MB undonated", flush=True)
+    return row
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--out", default="BENCH_federation.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-config CI smoke: K=2, 1 timed round, "
+                         "separate output file")
+    ap.add_argument("--out", default=None)
     args, _ = ap.parse_known_args()
-    ks = (4, 8) if args.quick else (4, 8, 16)
-    rounds = 2 if args.quick else 3
-    rows = [bench_cfg(f"round_latency_k{k}", k, ("image", "text"), rounds)
+    out = args.out or ("BENCH_federation.smoke.json" if args.smoke
+                       else "BENCH_federation.json")
+    if args.smoke:
+        ks, rounds = (2,), 1
+        sweep_modalities = ("genetics", "tabular")
+        mixed = ("genetics", "tabular")
+        mixed_k = 2
+    else:
+        ks = (4, 8) if args.quick else (4, 8, 16)
+        rounds = 2 if args.quick else 3
+        sweep_modalities = ("image", "text")
+        mixed = MIXED_MODALITIES
+        mixed_k = 8
+    rows = [bench_cfg(f"round_latency_k{k}", k, sweep_modalities, rounds)
             for k in ks]
-    rows.append(bench_cfg(
-        "mixed_width_padding_tax_k8", 8,
-        ("image", "text", "genetics", "tabular"), rounds))
+    rows.append(bench_mixed_bucketed(
+        f"mixed_width_bucketed_k{mixed_k}", mixed_k, mixed, rounds))
     results = {
         "bench": "federation_round_latency",
         "model": "fedmm-small (reduced: 2L/64d)",
         "backend": "cpu",
         "rows": rows,
     }
-    with open(args.out, "w") as fh:
+    with open(out, "w") as fh:
         json.dump(results, fh, indent=2)
-    print(f"wrote {args.out}")
+    print(f"wrote {out}")
 
 
 if __name__ == "__main__":

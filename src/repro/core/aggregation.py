@@ -53,18 +53,68 @@ def weighted_average_stacked(stacked, weights: Array, shipped_mask):
     marked shipped are precision-weight-averaged along the leading node axis
     and broadcast back to every node; node-local leaves (adapters W_mk) pass
     through untouched.  ``shipped_mask`` is a static bool pytree matching
-    ``stacked`` (``None`` placeholders align)."""
-    w = weights.astype(jnp.float32)
+    ``stacked`` (``None`` placeholders align).  The single-bucket case of
+    ``weighted_average_bucketed``, kept as the simple-layout entry point."""
+    return weighted_average_bucketed(
+        (stacked,), weights, (shipped_mask,), (int(weights.shape[0]),))[0]
 
-    def avg(leaf, shipped):
-        if leaf is None or not shipped:
+
+def bucketed_partial_sums(bucket_trees, weights: Array, shipped_masks,
+                          bucket_sizes):
+    """Per-bucket weighted partial sums of the SHIPPED leaves, reduced
+    across buckets into one tree (float32; ``None`` at non-shipped leaves).
+    ``weights`` is (K,) in bucket-concatenated row order.  Shipped leaves
+    must have identical shapes in every bucket."""
+    is_none = lambda x: x is None
+    partials, off = [], 0
+    for tree, mask, kb in zip(bucket_trees, shipped_masks, bucket_sizes):
+        w = weights[off:off + kb].astype(jnp.float32)
+        off += kb
+
+        def part(leaf, m, w=w):
+            if leaf is None or not m:
+                return None
+            return jnp.tensordot(w, leaf.astype(jnp.float32), axes=1)
+
+        partials.append(jax.tree.map(part, tree, mask, is_leaf=is_none))
+    total = partials[0]
+    for p in partials[1:]:
+        total = jax.tree.map(
+            lambda a, b: None if a is None else a + b, total, p,
+            is_leaf=is_none)
+    return total
+
+
+def broadcast_into_buckets(bucket_trees, shipped_masks, total):
+    """Broadcast the reduced shipped average back onto every node row of
+    every bucket; non-shipped leaves pass through untouched."""
+    is_none = lambda x: x is None
+
+    def bcast(leaf, m, a):
+        if leaf is None or not m:
             return leaf
-        a = jnp.tensordot(w, leaf.astype(jnp.float32),
-                          axes=1).astype(leaf.dtype)
-        return jnp.broadcast_to(a[None], leaf.shape)
+        return jnp.broadcast_to(a.astype(leaf.dtype)[None], leaf.shape)
 
-    return jax.tree.map(avg, stacked, shipped_mask,
-                        is_leaf=lambda x: x is None)
+    return tuple(
+        jax.tree.map(bcast, tree, mask, total, is_leaf=is_none)
+        for tree, mask in zip(bucket_trees, shipped_masks))
+
+
+def weighted_average_bucketed(bucket_trees, weights: Array, shipped_masks,
+                              bucket_sizes):
+    """Server step across width BUCKETS: ``bucket_trees[b]`` stacks the
+    bucket's nodes along a leading axis; ``weights`` is (K,) in
+    bucket-concatenated row order.  Shipped leaves (identical shapes in
+    every bucket) are precision-weight-averaged across ALL buckets via
+    per-bucket partial sums, then broadcast back into each bucket;
+    node-local leaves (the W_mk adapters, whose widths differ per bucket)
+    pass through untouched.  The sharded engine path reuses the two halves
+    (``bucketed_partial_sums`` / ``broadcast_into_buckets``) with a psum
+    between them."""
+    return broadcast_into_buckets(
+        bucket_trees, shipped_masks,
+        bucketed_partial_sums(bucket_trees, weights, shipped_masks,
+                              bucket_sizes))
 
 
 def comm_bytes_per_round(trainable_tree, gram_side: int = 0) -> int:

@@ -1,4 +1,4 @@
-"""Node-stacked federation round engine.
+"""Width-bucketed node-stacked federation round engine.
 
 The paper's protocol is embarrassingly parallel across nodes: K clients run
 E local steps with zero cross-node communication, then a low-rank server
@@ -7,22 +7,35 @@ round.  This module executes that structure as ONE compiled program instead
 of K x E separate jit dispatches:
 
   - per-node trainables / opt states / RNG keys are stacked along a leading
-    node axis (heterogeneous adapters are padded to the max tokenizer width
-    by the caller — zero-padding is exact: padded rows see zero inputs,
-    receive zero gradients, and stay zero under AdamW);
-  - ``jax.vmap`` maps the caller's ``local_step`` across the node axis;
-  - ``jax.lax.scan`` runs the E local steps;
+    node axis.  Heterogeneous tokenizer widths are grouped into W *width
+    buckets* by the caller: each bucket stacks only the nodes whose
+    adapters share a (padded) width, so a 192-wide tabular node never pays
+    the w^2 compute of the 2048-wide text bucket.  Bucket membership is
+    static, so the W per-bucket sub-programs are stitched by a plain Python
+    loop at trace time — the round is still a single jit dispatch;
+  - within a bucket, ``jax.vmap`` maps the caller's ``local_step`` across
+    the node axis and ``jax.lax.scan`` runs the E local steps
+    (zero-padding to the bucket width is exact: padded rows see zero
+    inputs, receive zero gradients, and stay zero under AdamW);
   - the server step (Gram consensus + precision weights + shipped-side-car
-    averaging + broadcast) runs in the same program, so one round is a
-    single ``jax.jit`` call;
-  - with ``mesh=...`` the node axis is mapped onto the mesh batch axes via
-    ``shard_map`` and the server step becomes ``psum``/``all_gather``
-    collectives whose payload is low-rank-sized (the paper's communication
-    claim, now visible as the program's only cross-slice traffic).
+    averaging + broadcast) runs once on the bucket-concatenated pooled
+    activations, in the same program — shipped side-cars have identical
+    shapes in every bucket, so the cross-bucket average is a per-bucket
+    partial sum followed by a broadcast back into each bucket;
+  - round-state buffers (trainables, opt states, RNG keys, consensus Gram)
+    are DONATED to the compiled round (``donate_argnums``), so round N's
+    outputs alias round N+1's inputs and peak round-state memory stays at
+    ~1x instead of 2x at large K;
+  - with ``mesh=...`` each bucket's node axis is mapped onto the mesh batch
+    axes via ``shard_map`` and the server step becomes ``psum`` /
+    ``all_gather`` collectives whose payload is low-rank-sized (the paper's
+    communication claim, now visible as the program's only cross-slice
+    traffic).
 
 The engine is workload-agnostic: ``local_step`` owns the loss (multimodal
-classification in ``core.federation``, LM fine-tuning in ``launch.train``);
-the engine owns batching, the round loop, and the server math.
+classification in ``core.federation``, LM fine-tuning in ``launch.train``,
+the one-local-step FedSGD form in ``launch.steps``); the engine owns
+batching, the round loop, and the server math.
 """
 from __future__ import annotations
 
@@ -53,6 +66,19 @@ class EngineConfig:
     local_steps: int
     aggregation: str = "precision"     # precision | uniform
     center_cka: bool = False
+    # width buckets: per-bucket node counts (sum == n_nodes).  () means a
+    # single bucket of all n_nodes (the homogeneous / legacy-padded layout).
+    bucket_sizes: Tuple[int, ...] = ()
+    # canonical node id of each engine row (bucket-concatenated order);
+    # () means identity.  Metrics are returned in CANONICAL node order.
+    node_perm: Tuple[int, ...] = ()
+    # donate round-state buffers (train/opt/keys/gbar) to the compiled
+    # round so outputs alias inputs (halves peak round-state memory).
+    donate: bool = True
+    # Gram backend for the server step: "auto" (Pallas on TPU, reference
+    # elsewhere), "reference" (core.cka), or "pallas" (kernels.gram; runs
+    # in interpreter mode off-TPU so it stays testable on CPU).
+    gram_backend: str = "auto"
 
 
 def pad_axis(x: Array, width: int, axis: int = -1) -> Array:
@@ -76,45 +102,111 @@ def stack_nodes(trees) -> Any:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
 
 
+def _as_buckets(x) -> tuple:
+    return x if isinstance(x, tuple) else (x,)
+
+
 class RoundEngine:
     """One federated round as a single compiled function.
 
-    State layout: every leaf of ``node_train`` / ``node_opt`` carries a
-    leading node axis of size K; ``node_keys`` is (K, 2) uint32; ``gbar``
-    is the replicated consensus Gram.  ``round_fn(train, opt, keys, gbar,
-    statics, batches)`` returns ``(train, opt, keys, gbar, metrics)`` where
-    ``metrics = {"scalars": {name: (K,)}, "weights": (K,),
-    "cross_node_cka": ()}``.
+    State layout: the round state is a TUPLE of per-bucket pytrees.  Every
+    leaf of ``trains[b]`` / ``opts[b]`` carries a leading node axis of the
+    bucket's size; ``keys[b]`` is (k_b, 2) uint32; ``gbar`` is the
+    replicated consensus Gram shared by all buckets.  ``round_fn(trains,
+    opts, keys, gbar, statics, batches)`` returns ``(trains, opts, keys,
+    gbar, metrics)`` where ``metrics = {"scalars": {name: (K,)},
+    "weights": (K,), "cross_node_cka": ()}`` — per-node entries in
+    CANONICAL node order (the engine un-permutes the bucket layout).
 
-    ``batches`` is either ``None`` (the local step samples its own data from
-    the carried RNG keys) or a pytree with leading (E, K, ...) axes scanned
-    over the local steps.  ``statics`` is a per-node constant pytree
-    (leading K axis) vmapped alongside the state — anchor tokens, modality
-    maps, corrupt/bridge masks.
+    ``batches[b]`` is either ``None`` (the local step samples its own data
+    from the carried RNG keys) or a pytree with leading (E, k_b, ...) axes
+    scanned over the local steps.  ``statics[b]`` is a per-node constant
+    pytree (leading k_b axis) vmapped alongside the state — anchor tokens,
+    modality maps, corrupt/bridge masks.
+
+    Shipped side-car leaves must have identical shapes in every bucket
+    (only node-LOCAL leaves — the W_mk adapters — may differ in width),
+    which is what lets the server average run across buckets.
+
+    Single-bucket callers pass 1-tuples (a bare pytree is auto-wrapped for
+    the shipped mask only; state must always be tuples).
     """
 
     def __init__(self, ecfg: EngineConfig, opt, local_step: LocalStep,
-                 shipped_mask, *, mesh=None):
+                 shipped_masks, *, mesh=None, jit: bool = True):
         self.ecfg = ecfg
         self.opt = opt
         self.local_step = local_step
-        self.shipped_mask = shipped_mask
+        self.shipped_masks = _as_buckets(shipped_masks)
+        self.bucket_sizes = ecfg.bucket_sizes or (ecfg.n_nodes,)
+        self.n_buckets = len(self.bucket_sizes)
+        if sum(self.bucket_sizes) != ecfg.n_nodes:
+            raise ValueError(f"bucket_sizes {self.bucket_sizes} do not sum "
+                             f"to n_nodes={ecfg.n_nodes}")
+        if len(self.shipped_masks) != self.n_buckets:
+            raise ValueError(f"{len(self.shipped_masks)} shipped masks for "
+                             f"{self.n_buckets} buckets")
+        perm = ecfg.node_perm or tuple(range(ecfg.n_nodes))
+        if sorted(perm) != list(range(ecfg.n_nodes)):
+            raise ValueError(f"node_perm {perm} is not a permutation")
+        inv = [0] * ecfg.n_nodes
+        for row, node in enumerate(perm):
+            inv[node] = row
+        # identity permutations skip the gather entirely
+        self._inv_perm = (None if tuple(perm) == tuple(range(ecfg.n_nodes))
+                          else tuple(inv))
         self.mesh = mesh
+        if ecfg.gram_backend not in ("auto", "reference", "pallas"):
+            raise ValueError(f"unknown gram_backend {ecfg.gram_backend!r}; "
+                             f"expected auto | reference | pallas")
+        self._gram_backend = ecfg.gram_backend
+        if self._gram_backend == "auto":
+            self._gram_backend = ("pallas" if jax.default_backend() == "tpu"
+                                  else "reference")
+        donate = (0, 1, 2, 3) if ecfg.donate else ()
         if mesh is None:
-            self.round_fn = jax.jit(self._round)
+            # jit=False leaves round_fn as the plain round body, for callers
+            # that inline the round into their own compilation boundary
+            # (launch.steps owns jit/shardings/donation itself)
+            self.round_fn = (jax.jit(self._round, donate_argnums=donate)
+                             if jit else self._round)
         else:
             from repro.launch.mesh import batch_axes
+            from repro.launch.mesh import n_nodes as mesh_shards
             self._axes = batch_axes(mesh)
-            n_shards = 1
-            for a in self._axes:
-                n_shards *= mesh.shape[a]
+            n_shards = mesh_shards(mesh)
             if not self._axes:
                 raise ValueError("mesh has no batch axes to map nodes onto")
-            if ecfg.n_nodes % n_shards:
-                raise ValueError(
-                    f"n_nodes={ecfg.n_nodes} not divisible by the "
-                    f"{n_shards} mesh batch slices {self._axes}")
-            self.round_fn = jax.jit(self._round_sharded)
+            for b, kb in enumerate(self.bucket_sizes):
+                if kb % n_shards:
+                    raise ValueError(
+                        f"bucket {b} has {kb} nodes, not divisible by the "
+                        f"{n_shards} mesh batch slices {self._axes}")
+            self.round_fn = (jax.jit(self._round_sharded,
+                                     donate_argnums=donate)
+                             if jit else self._round_sharded)
+
+    # ------------------------------------------------------------------
+    def _grams_of(self, pooled_a: Array) -> Array:
+        """(K, Ba, D) -> (K, Ba, Ba) anchor Grams, dispatched by backend:
+        the MXU-tiled Pallas kernel on TPU (interpret mode elsewhere, so
+        the dispatch stays CPU-testable), the jnp reference otherwise."""
+        if self._gram_backend == "pallas":
+            from repro.kernels.gram import cosine_gram_pallas
+            fn = functools.partial(
+                cosine_gram_pallas,
+                interpret=(jax.default_backend() != "tpu"))
+            # K is static and small; the unrolled loop sidesteps
+            # vmap-of-pallas_call batching rules
+            return jnp.stack([fn(pooled_a[i])
+                              for i in range(pooled_a.shape[0])])
+        return jax.vmap(cka_mod.cosine_gram)(pooled_a)
+
+    def _unpermute(self, x: Array) -> Array:
+        """Engine-row order (bucket-concatenated) -> canonical node order."""
+        if self._inv_perm is None:
+            return x
+        return jnp.take(x, jnp.asarray(self._inv_perm), axis=0)
 
     # ------------------------------------------------------------------
     def _local_epochs(self, train, opt_state, keys, gbar, statics, batches):
@@ -138,49 +230,66 @@ class RoundEngine:
         return train, opt_state, keys, last
 
     # ------------------------------------------------------------------
-    def _round(self, train, opt_state, keys, gbar, statics, batches):
+    def _round(self, trains, opts, keys, gbar, statics, batches):
         k = self.ecfg.n_nodes
-        train, opt_state, keys, last = self._local_epochs(
-            train, opt_state, keys, gbar, statics, batches)
-        pooled = last.pop("pooled")
-        pooled_a = last.pop("pooled_a")
+        trains, opts, keys = list(trains), list(opts), list(keys)
+        lasts = []
+        # static Python loop over buckets: W sub-vmaps, ONE compiled round
+        for b in range(self.n_buckets):
+            trains[b], opts[b], keys[b], last = self._local_epochs(
+                trains[b], opts[b], keys[b], gbar, statics[b], batches[b])
+            lasts.append(last)
+        pooled = jnp.concatenate([l.pop("pooled") for l in lasts])
+        pooled_a = jnp.concatenate([l.pop("pooled_a") for l in lasts])
+        scalars = {name: jnp.concatenate([l[name] for l in lasts])
+                   for name in lasts[0]}
 
         # ---- server (same program: no extra dispatch) ----
-        grams = jax.vmap(cka_mod.cosine_gram)(pooled_a)
+        grams = self._grams_of(pooled_a)
         new_gbar = cka_mod.consensus_gram(grams)
         if self.ecfg.aggregation == "precision":
             weights = unc.precision_weights(
                 unc.batched_precisions(pooled, pooled_a))
         else:
             weights = jnp.full((k,), 1.0 / k, jnp.float32)
-        train = agg.weighted_average_stacked(train, weights,
-                                             self.shipped_mask)
+        trains = agg.weighted_average_bucketed(
+            tuple(trains), weights, self.shipped_masks, self.bucket_sizes)
         metrics = {
-            "scalars": last,
-            "weights": weights,
+            "scalars": {name: self._unpermute(v)
+                        for name, v in scalars.items()},
+            "weights": self._unpermute(weights),
             "cross_node_cka": cka_mod.mean_offdiag_cka(
                 grams, center=self.ecfg.center_cka),
         }
-        return train, opt_state, keys, new_gbar, metrics
+        return tuple(trains), tuple(opts), tuple(keys), new_gbar, metrics
 
     # ------------------------------------------------------------------
-    def _round_sharded(self, train, opt_state, keys, gbar, statics, batches):
-        """shard_map path: node axis split over the mesh batch axes; the
-        server step's cross-slice traffic is exactly the protocol's uplink
-        (Grams + precisions + shipped side-cars)."""
+    def _round_sharded(self, trains, opts, keys, gbar, statics, batches):
+        """shard_map path: each bucket's node axis split over the mesh
+        batch axes; the server step's cross-slice traffic is exactly the
+        protocol's uplink (Grams + precisions + shipped side-cars)."""
         ax = self._axes
         k = self.ecfg.n_nodes
         node_spec = P(ax)
-        batch_spec = P() if batches is None else P(None, ax)
+        batch_specs = tuple(P() if b is None else P(None, ax)
+                            for b in batches)
 
-        def inner(train, opt_state, keys, gbar, statics, batches):
-            train, opt_state, keys, last = self._local_epochs(
-                train, opt_state, keys, gbar, statics, batches)
-            pooled = last.pop("pooled")
-            pooled_a = last.pop("pooled_a")
-            k_loc = keys.shape[0]
+        def inner(trains, opts, keys, gbar, statics, batches):
+            trains, opts, keys = list(trains), list(opts), list(keys)
+            lasts = []
+            for b in range(self.n_buckets):
+                trains[b], opts[b], keys[b], last = self._local_epochs(
+                    trains[b], opts[b], keys[b], gbar,
+                    statics[b], batches[b])
+                lasts.append(last)
+            pooled = jnp.concatenate([l.pop("pooled") for l in lasts])
+            pooled_a = jnp.concatenate([l.pop("pooled_a") for l in lasts])
+            scalars = {name: jnp.concatenate([l[name] for l in lasts])
+                       for name in lasts[0]}
+            kb_loc = tuple(ks.shape[0] for ks in keys)
+            k_loc = sum(kb_loc)
 
-            grams_loc = jax.vmap(cka_mod.cosine_gram)(pooled_a)
+            grams_loc = self._grams_of(pooled_a)
             new_gbar = jax.lax.psum(grams_loc.sum(0), ax) / k
             if self.ecfg.aggregation == "precision":
                 p_loc = jnp.maximum(
@@ -190,33 +299,45 @@ class RoundEngine:
             else:
                 w_loc = jnp.full((k_loc,), 1.0 / k, jnp.float32)
 
-            def avg(leaf, m):
-                if leaf is None or not m:
-                    return leaf
-                a = jnp.tensordot(w_loc.astype(jnp.float32),
-                                  leaf.astype(jnp.float32), axes=1)
-                a = jax.lax.psum(a, ax).astype(leaf.dtype)
-                return jnp.broadcast_to(a[None], leaf.shape)
+            # shipped average: per-bucket local partial sums -> one psum ->
+            # broadcast (the unsharded server math with a psum in between)
+            total = agg.bucketed_partial_sums(
+                tuple(trains), w_loc, self.shipped_masks, kb_loc)
+            total = jax.tree.map(
+                lambda a: None if a is None else jax.lax.psum(a, ax),
+                total, is_leaf=lambda x: x is None)
+            trains = list(agg.broadcast_into_buckets(
+                tuple(trains), self.shipped_masks, total))
 
-            train = jax.tree.map(avg, train, self.shipped_mask,
-                                 is_leaf=lambda x: x is None)
+            # gather per BUCKET (each reassembles that bucket's node order),
+            # then concatenate — gathering the locally-concatenated array
+            # would interleave shard-major instead of bucket-major
             gather = functools.partial(jax.lax.all_gather, axis_name=ax,
                                        axis=0, tiled=True)
-            grams_all = gather(grams_loc)
+
+            def gather_cat(v_loc):
+                off, parts = 0, []
+                for kb in kb_loc:
+                    parts.append(gather(v_loc[off:off + kb]))
+                    off += kb
+                return jnp.concatenate(parts)
+
+            grams_all = gather(grams_loc)   # order-invariant consumer
             metrics = {
-                "scalars": jax.tree.map(gather, last),
-                "weights": gather(w_loc),
+                "scalars": {name: self._unpermute(gather_cat(v))
+                            for name, v in scalars.items()},
+                "weights": self._unpermute(gather_cat(w_loc)),
                 "cross_node_cka": cka_mod.mean_offdiag_cka(
                     grams_all, center=self.ecfg.center_cka),
             }
-            return train, opt_state, keys, new_gbar, metrics
+            return tuple(trains), tuple(opts), tuple(keys), new_gbar, metrics
 
         return _shard_map(
             inner, mesh=self.mesh,
             in_specs=(node_spec, node_spec, node_spec, P(), node_spec,
-                      batch_spec),
+                      batch_specs),
             out_specs=(node_spec, node_spec, node_spec, P(), P()),
-        )(train, opt_state, keys, gbar, statics, batches)
+        )(trains, opts, keys, gbar, statics, batches)
 
 
 def _shard_map(fn, *, mesh, in_specs, out_specs):

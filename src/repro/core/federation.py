@@ -29,22 +29,40 @@ Kept as the oracle for the engine-equivalence tests and benchmarks.
 default.  Architecture:
 
   * **node axis**: per-node trainables, optimizer states and RNG keys are
-    stacked along a leading axis of size K; ``jax.vmap`` maps the local
-    step across it and ``jax.lax.scan`` runs the E local steps.
-  * **padding strategy**: heterogeneous per-modality widths (tokenizer
-    ``d_out`` differs per node) are zero-padded to the max width.  Padded
-    token channels are exactly zero, so padded adapter rows receive zero
-    gradients and stay zero under AdamW (no weight decay) — the padded
-    program is numerically equivalent to the ragged one.  Heterogeneous
-    node *types* (corrupt / bridge / synthetic-anchor) are static branch
-    masks: both data branches are computed from the same RNG keys and
-    selected per node, and the bridge contrastive term is weighted by a
-    0/1 mask, so ONE compiled program serves every node type.
+    stacked along a leading axis; ``jax.vmap`` maps the local step across
+    it and ``jax.lax.scan`` runs the E local steps.
+  * **width bucketing** (the heterogeneous-width strategy): per-modality
+    tokenizer widths differ per node (text 2048 .. tabular 192), and the
+    paper's regime makes that the COMMON case.  Nodes are grouped by
+    adapter width into W buckets; each bucket stacks only the nodes whose
+    widths match (zero-padded to the bucket width — for a bridge node,
+    the max of its two adapters' widths), so a narrow tabular node never
+    pays the quadratic w^2 tokenizer/adapter compute of the text bucket.
+    Zero padding WITHIN a bucket stays exact: padded token channels are
+    zero, so padded adapter rows receive zero gradients and stay zero
+    under AdamW (no weight decay) — each bucket's program is numerically
+    equivalent to the ragged one.  Bucket membership is static, so the W
+    per-bucket sub-programs are stitched at trace time and the round
+    stays ONE jit dispatch; the server step runs once on the
+    bucket-concatenated pooled activations and the engine returns metrics
+    in canonical node order (the stable node->bucket permutation is
+    engine state, invisible to callers).  ``width_bucketing=False``
+    restores the legacy single-bucket pad-to-max-width layout (the
+    benchmark baseline).
+  * **heterogeneous node types** (corrupt / bridge / synthetic-anchor)
+    are static branch masks: both data branches are computed from the
+    same RNG keys and selected per node, and the bridge contrastive term
+    is weighted by a 0/1 mask, so ONE compiled program serves every node
+    type.
   * **round compilation boundary**: local epochs + Gram upload + LAP
     precision + consensus + precision-weighted side-car averaging +
     broadcast are one jitted call — K x E dispatches per round become 1.
-  * **mesh path**: with ``mesh=...`` the node axis is ``shard_map``-ped
-    onto the mesh batch axes (``launch.mesh.batch_axes``); the server step
+    Round-state buffers (stacked trainables / opt states / keys / G_bar)
+    are DONATED to the compiled round, so round N's outputs alias round
+    N+1's inputs and peak round-state memory stays ~1x instead of 2x.
+  * **mesh path**: with ``mesh=...`` each bucket's node axis is
+    ``shard_map``-ped onto the mesh batch axes (``launch.mesh.batch_axes``;
+    every bucket size must divide the shard count); the server step
     becomes psum/all_gather collectives whose payload is the protocol's
     actual uplink (Grams, precisions, shipped side-cars).
 """
@@ -439,19 +457,28 @@ class SequentialFederation:
 
 
 class Federation(SequentialFederation):
-    """Node-stacked federation: a thin wrapper over
+    """Width-bucketed node-stacked federation: a thin wrapper over
     ``repro.core.engine.RoundEngine``.  One round — E vmapped local epochs
-    plus the whole server step — is a single jitted call; pass ``mesh=`` to
-    shard the node axis over the mesh batch axes (see the module docstring
-    for the architecture).  Public API and history records match the
-    sequential reference; per-node views in ``self.nodes`` are materialised
-    lazily (unpadded) from the stacked state on access.  Checkpoints store
-    the STACKED server state and are engine-to-engine only — not loadable
-    into a ``SequentialFederation`` (whose checkpoints are per-node)."""
+    per width bucket plus the whole server step — is a single jitted call
+    with donated round-state buffers; pass ``mesh=`` to shard each bucket's
+    node axis over the mesh batch axes (see the module docstring for the
+    architecture).  Public API and history records match the sequential
+    reference; per-node views in ``self.nodes`` are materialised lazily
+    (unpadded, through the bucket permutation) from the stacked state on
+    access.  Checkpoints store the BUCKETED server state and are
+    engine-to-engine only — not loadable into a ``SequentialFederation``
+    (whose checkpoints are per-node) nor across a different bucket layout:
+    ``width_bucketing`` AND the mesh batch-slice count must match at save
+    and restore (an unshardable bucketed layout falls back to the single
+    padded bucket, with a warning, which changes the state structure)."""
 
     def __init__(self, fed: FederationConfig, model: ModelConfig = None, *,
-                 mesh=None):
+                 mesh=None, width_bucketing: bool = True, donate: bool = True,
+                 gram_backend: str = "auto"):
         super().__init__(fed, model)
+        self._width_bucketing = width_bucketing
+        self._donate = donate
+        self._gram_backend = gram_backend
         self._build_engine(mesh)
 
     # self.nodes is a lazily refreshed VIEW of the stacked state: rounds
@@ -469,46 +496,125 @@ class Federation(SequentialFederation):
         self._nodes = value
 
     # ------------------------------------------------------------------
+    def _node_width(self, node) -> int:
+        """Adapter width the node needs inside its bucket: its tokenizer's
+        d_out, or for a bridge node the max of its two adapters' widths."""
+        d = self.tokenizers[node["modality"]].d_out
+        if node.get("bridge"):
+            d = max(d, self.tokenizers[node["modality2"]].d_out)
+        return d
+
+    def _bucket_layout(self, widths, mesh):
+        """Per-node widths -> (bucket_widths, buckets).  With a mesh, every
+        bucket's node count must divide the shard count; when the bucketed
+        layout can't shard (e.g. one node per width on a multi-device
+        mesh), fall back to the single pad-to-max-width bucket rather than
+        reject a config the pre-bucketing engine accepted."""
+        if self._width_bucketing:
+            bucket_widths = tuple(sorted(set(widths)))
+            buckets = [tuple(i for i, w in enumerate(widths) if w == wb)
+                       for wb in bucket_widths]
+        else:           # legacy layout: one bucket padded to the max width
+            bucket_widths = (self._d_max,)
+            buckets = [tuple(range(len(widths)))]
+        if mesh is not None and len(buckets) > 1:
+            from repro.launch.mesh import n_nodes as mesh_shards
+            n_shards = mesh_shards(mesh)
+            if any(len(m) % n_shards for m in buckets):
+                import warnings
+                warnings.warn(
+                    f"width buckets {[len(m) for m in buckets]} do not "
+                    f"divide the {n_shards} mesh batch slices; falling "
+                    f"back to the single pad-to-max-width bucket "
+                    f"(checkpoints from this layout require the same "
+                    f"mesh shard count to restore)", stacklevel=3)
+                bucket_widths = (self._d_max,)
+                buckets = [tuple(range(len(widths)))]
+        return bucket_widths, buckets
+
     def _build_engine(self, mesh) -> None:
         fed = self.fed
-        self._has_bridges = any(n.get("bridge") for n in self.nodes)
+        nodes = self._nodes
+        self._has_bridges = any(n.get("bridge") for n in nodes)
         self._d_max = max(t.d_out for t in self.tokenizers.values())
         d_model = self.cfg.d_model
 
-        # ---- node-stacked state (padding-to-max-width, see module doc) ----
-        trees = []
-        for node in self.nodes:
-            t = dict(node["trainable"])
-            t["adapter"] = {"w": engine_mod.pad_axis(
-                t["adapter"]["w"], self._d_max, 0)}
-            if self._has_bridges:
-                if node.get("bridge"):
-                    t["adapter2"] = {"w": engine_mod.pad_axis(
-                        t["adapter2"]["w"], self._d_max, 0)}
-                else:
-                    # inert slot: the masked contrastive term gives it
-                    # exactly-zero grads and it is never shipped, but it
-                    # must be NONZERO — a zero adapter makes pooled2 the
-                    # zero vector, whose norm has a NaN gradient that
-                    # poisons the whole node even under a 0.0 mask
-                    t["adapter2"] = {"w": engine_mod.pad_axis(make_linear(
-                        jax.random.fold_in(node["key"], 4242),
-                        self.tokenizers[node["modality"]].d_out, d_model,
-                        jnp.float32)["w"], self._d_max, 0)}
-            trees.append(t)
-        self._train = engine_mod.stack_nodes(trees)
-        self._opt_state = jax.vmap(self.opt.init)(self._train)
-        self._keys = jnp.stack([n["key"] for n in self.nodes])
+        # ---- width-bucket layout (see module doc) ----
+        widths = [self._node_width(n) for n in nodes]
+        self._bucket_widths, buckets = self._bucket_layout(widths, mesh)
+        self._buckets = tuple(buckets)
+        self._node_bucket = {i: (b, r) for b, members in enumerate(buckets)
+                             for r, i in enumerate(members)}
 
-        # ---- per-node compile-time constants ----
+        # ---- per-bucket node-stacked state ----
+        trains, opts, keyss, staticss, masks = [], [], [], [], []
+        for members, wb in zip(buckets, self._bucket_widths):
+            trees = []
+            for i in members:
+                node = nodes[i]
+                t = dict(node["trainable"])
+                t["adapter"] = {"w": engine_mod.pad_axis(
+                    t["adapter"]["w"], wb, 0)}
+                if self._has_bridges:
+                    if node.get("bridge"):
+                        t["adapter2"] = {"w": engine_mod.pad_axis(
+                            t["adapter2"]["w"], wb, 0)}
+                    else:
+                        # inert slot: the masked contrastive term gives it
+                        # exactly-zero grads and it is never shipped, but it
+                        # must be NONZERO — a zero adapter makes pooled2 the
+                        # zero vector, whose norm has a NaN gradient that
+                        # poisons the whole node even under a 0.0 mask
+                        t["adapter2"] = {"w": engine_mod.pad_axis(
+                            make_linear(
+                                jax.random.fold_in(node["key"], 4242),
+                                self.tokenizers[node["modality"]].d_out,
+                                d_model, jnp.float32)["w"], wb, 0)}
+                trees.append(t)
+            train_b = engine_mod.stack_nodes(trees)
+            trains.append(train_b)
+            opts.append(jax.vmap(self.opt.init)(train_b))
+            keyss.append(jnp.stack([nodes[i]["key"] for i in members]))
+            staticss.append(self._bucket_statics(members, wb))
+            masks.append(_shipped_mask(train_b))
+        self._trains = tuple(trains)
+        self._opts = tuple(opts)
+        self._keys = tuple(keyss)
+        self._staticss = tuple(staticss)
+
+        # comm accounting (constant across rounds; matches the reference,
+        # computed from node 0's UNpadded view)
+        smask0 = _shipped_mask(nodes[0]["trainable"])
+        shipped0, _ = _split_by_mask(nodes[0]["trainable"], smask0)
+        self._uplink_bytes = int(agg.comm_bytes_per_round(
+            shipped0, gram_side=self.gbar.shape[0]))
+        self._full_bytes = int(lora_mod.param_bytes(lora_mod.combine(
+            nodes[0]["trainable"], self._frozen_for(nodes[0]))))
+
+        ecfg = engine_mod.EngineConfig(
+            n_nodes=fed.n_nodes, local_steps=fed.local_steps,
+            aggregation=fed.aggregation, center_cka=fed.center_cka,
+            bucket_sizes=tuple(len(m) for m in buckets),
+            node_perm=tuple(i for members in buckets for i in members),
+            donate=self._donate, gram_backend=self._gram_backend)
+        self.engine = engine_mod.RoundEngine(
+            ecfg, self.opt, self._make_local_step(), tuple(masks),
+            mesh=mesh)
+
+    def _bucket_statics(self, members, wb: int) -> dict:
+        """Compile-time constants for one bucket's nodes, padded to the
+        bucket width ``wb``: anchor tokens, frozen tokenizer weights,
+        modality maps, corrupt/bridge masks."""
+        fed = self.fed
+        nodes = self._nodes
         anchors, tw1, tw2, tb1, mw, mb = [], [], [], [], [], []
-        for i, node in enumerate(self.nodes):
-            m = node["modality"]
+        for i in members:
+            m = nodes[i]["modality"]
             a = (self.synthetic_anchor_tokens[m]
                  if i in fed.synthetic_anchor_nodes
                  else self.anchor_tokens[m])
-            anchors.append(engine_mod.pad_axis(a, self._d_max, -1))
-            w1, b1, w2 = self.tokenizers[m].padded_weights(self._d_max)
+            anchors.append(engine_mod.pad_axis(a, wb, -1))
+            w1, b1, w2 = self.tokenizers[m].padded_weights(wb)
             tw1.append(w1), tb1.append(b1), tw2.append(w2)
             w, b = self.task.modality_map(m)
             mw.append(w), mb.append(b)
@@ -517,40 +623,26 @@ class Federation(SequentialFederation):
             "tok_w1": jnp.stack(tw1), "tok_b1": jnp.stack(tb1),
             "tok_w2": jnp.stack(tw2),
             "mod_w": jnp.stack(mw), "mod_b": jnp.stack(mb),
-            "corrupt": jnp.array([bool(n["corrupt"]) for n in self.nodes]),
+            "corrupt": jnp.array([bool(nodes[i]["corrupt"])
+                                  for i in members]),
         }
         if self._has_bridges:
             b2w1, b2b1, b2w2, m2w, m2b = [], [], [], [], []
-            for node in self.nodes:
+            for i in members:
+                node = nodes[i]
                 m2 = node.get("modality2", node["modality"])
-                w1, b1, w2 = self.tokenizers[m2].padded_weights(self._d_max)
+                w1, b1, w2 = self.tokenizers[m2].padded_weights(wb)
                 b2w1.append(w1), b2b1.append(b1), b2w2.append(w2)
                 w, b = self.task.modality_map(m2)
                 m2w.append(w), m2b.append(b)
             statics.update({
-                "bridge": jnp.array([1.0 if n.get("bridge") else 0.0
-                                     for n in self.nodes], jnp.float32),
+                "bridge": jnp.array([1.0 if nodes[i].get("bridge") else 0.0
+                                     for i in members], jnp.float32),
                 "tok2_w1": jnp.stack(b2w1), "tok2_b1": jnp.stack(b2b1),
                 "tok2_w2": jnp.stack(b2w2),
                 "mod2_w": jnp.stack(m2w), "mod2_b": jnp.stack(m2b),
             })
-        self._statics = statics
-
-        # comm accounting (constant across rounds; matches the reference,
-        # computed from node 0's UNpadded view)
-        smask0 = _shipped_mask(self.nodes[0]["trainable"])
-        shipped0, _ = _split_by_mask(self.nodes[0]["trainable"], smask0)
-        self._uplink_bytes = int(agg.comm_bytes_per_round(
-            shipped0, gram_side=self.gbar.shape[0]))
-        self._full_bytes = int(lora_mod.param_bytes(lora_mod.combine(
-            self.nodes[0]["trainable"], self._frozen_for(self.nodes[0]))))
-
-        ecfg = engine_mod.EngineConfig(
-            n_nodes=fed.n_nodes, local_steps=fed.local_steps,
-            aggregation=fed.aggregation, center_cka=fed.center_cka)
-        self.engine = engine_mod.RoundEngine(
-            ecfg, self.opt, self._make_local_step(),
-            _shipped_mask(self._train), mesh=mesh)
+        return statics
 
     # ------------------------------------------------------------------
     def _make_local_step(self):
@@ -630,9 +722,12 @@ class Federation(SequentialFederation):
 
     # ------------------------------------------------------------------
     def run_round(self) -> dict:
-        (self._train, self._opt_state, self._keys, self.gbar, metrics) = \
-            self.engine.round_fn(self._train, self._opt_state, self._keys,
-                                 self.gbar, self._statics, None)
+        # round-state buffers are donated: the previous round's arrays are
+        # invalidated by this call and replaced by the outputs
+        (self._trains, self._opts, self._keys, self.gbar, metrics) = \
+            self.engine.round_fn(self._trains, self._opts, self._keys,
+                                 self.gbar, self._staticss,
+                                 (None,) * len(self._trains))
         s = metrics["scalars"]
         rec = {
             "task_loss": float(jnp.mean(s["task"])),
@@ -663,35 +758,41 @@ class Federation(SequentialFederation):
         return tree
 
     def _refresh_node_views(self) -> None:
-        """Materialise per-node (unpadded) views of the stacked state so
-        ``self.nodes`` / ``node_params`` keep the reference's shapes."""
+        """Materialise per-node (unpadded) views of the bucketed state so
+        ``self.nodes`` / ``node_params`` keep the reference's shapes: node
+        i lives at row r of bucket b under the stable permutation."""
         for i, node in enumerate(self._nodes):
+            b, r = self._node_bucket[i]
             node["trainable"] = self._unpad_node_tree(
-                jax.tree.map(lambda x: x[i], self._train), node)
-            opt_i = jax.tree.map(lambda x: x[i], self._opt_state)
+                jax.tree.map(lambda x: x[r], self._trains[b]), node)
+            opt_i = jax.tree.map(lambda x: x[r], self._opts[b])
             node["opt_state"] = {
                 "m": self._unpad_node_tree(opt_i["m"], node),
                 "v": self._unpad_node_tree(opt_i["v"], node),
                 "step": opt_i["step"],
             }
-            node["key"] = self._keys[i]
+            node["key"] = self._keys[b][r]
 
     # ------------------------------------------------------------------
-    # checkpointing: engine checkpoints store the STACKED server state
+    # checkpointing: engine checkpoints store the BUCKETED server state
+    # (tuples of per-bucket stacked trees); the bucket layout is rebuilt
+    # deterministically from the config, so a restore into a federation
+    # with the same config and ``width_bucketing`` lands every node back
+    # at its row through the same permutation
     def save(self, path: str) -> None:
         from repro.checkpoint import save_checkpoint
-        state = {"gbar": self.gbar, "train": self._train,
-                 "opt": self._opt_state, "keys": self._keys}
+        state = {"gbar": self.gbar, "train": self._trains,
+                 "opt": self._opts, "keys": self._keys}
         save_checkpoint(path, state, step=len(self.history))
 
     def restore(self, path: str) -> int:
         from repro.checkpoint import load_checkpoint
-        like = {"gbar": self.gbar, "train": self._train,
-                "opt": self._opt_state, "keys": self._keys}
+        like = {"gbar": self.gbar, "train": self._trains,
+                "opt": self._opts, "keys": self._keys}
         state, step = load_checkpoint(path, like)
         self.gbar = state["gbar"]
-        self._train = state["train"]
-        self._opt_state = state["opt"]
+        self._trains = state["train"]
+        self._opts = state["opt"]
         self._keys = state["keys"]
         self._views_stale = True
         return step

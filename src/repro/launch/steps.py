@@ -1,26 +1,30 @@
 """Mesh-scale step functions lowered by the dry-run and the drivers.
 
 ``make_fed_train_step`` is the paper's federated round as one SPMD program
-(FedSGD form: one local step + precision-weighted aggregation — the
-multi-local-step divergent form runs on the node-stacked round engine,
-``repro.core.engine.RoundEngine``, via ``launch/train.py``):
+— the FedSGD form, now FOLDED into the node-stacked round engine
+(``repro.core.engine.RoundEngine`` with E=1 and the round's batches passed
+in), so the one-local-step form and the multi-step divergent form
+(``launch/train.py``) share the engine's server math (consensus Gram, LAP
+precision weights, precision-weighted side-car averaging) instead of
+duplicating it:
 
   - the mesh batch axes ("pod","data") carry the K federated nodes
-    (one node per slice, node k's samples are batch rows k*b_loc:(k+1)*b_loc);
-  - each node's anchor pass produces its Gram G_k; loss_k = CE_k +
-    lambda*(1-CKA(G_k, G_bar))  (Eq. 3);
-  - LAP uncertainties (Eq. 6) give precision weights p_k; total loss
-    sum_k p_k * loss_k makes the aggregated update exactly the paper's
-    precision-weighted average of per-node GeoLoRA updates (Eq. 4/5 with
-    one local step);
+    (node k's samples are batch rows k*b_loc:(k+1)*b_loc, reshaped onto
+    the engine's node axis);
+  - each node runs ONE local step on loss_k = CE_k +
+    lambda*(1-CKA(G_k, G_bar))  (Eq. 3), producing its own AdamW update;
+  - the engine's server step averages the per-node updates with LAP
+    precision weights (Eq. 6) and averages the consensus Gram — exactly
+    the paper's precision-weighted average of per-node GeoLoRA updates
+    (Eq. 4/5 with one local step).  The server keeps one optimizer state:
+    the per-node AdamW moments are precision-weight-averaged the same way;
   - only side-cars (lora_B / dora_m) receive gradients; the collective
     footprint over the node axes is therefore low-rank-sized — the paper's
     communication claim, visible in the §Roofline collective term.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -28,65 +32,94 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import cka as cka_mod
 from repro.core import lora as lora_mod
-from repro.core import uncertainty as unc
+from repro.core.engine import EngineConfig, RoundEngine
 from repro.models import transformer as T
-from repro.models.common import cross_entropy_loss, linear
+from repro.models.common import cross_entropy_loss
 from repro.optim.adamw import AdamW
 
 Array = jax.Array
 
 
-def _per_node_ce(logits: Array, labels: Array, k_nodes: int) -> Array:
-    """(B, S, V), (B, S) -> (K,) per-node mean CE."""
-    logits32 = logits.astype(jnp.float32)
-    logz = jax.nn.logsumexp(logits32, axis=-1)
-    gold = jnp.take_along_axis(logits32, labels[..., None], axis=-1)[..., 0]
-    nll = logz - gold                                     # (B, S)
-    b = nll.shape[0]
-    return nll.reshape(k_nodes, b // k_nodes, -1).mean(axis=(1, 2))
+def _none_map(f, *trees):
+    return jax.tree.map(lambda *xs: None if xs[0] is None else f(*xs),
+                        *trees, is_leaf=lambda x: x is None)
 
 
 def make_fed_train_step(cfg: ModelConfig, rt: T.Runtime, opt: AdamW, *,
                         k_nodes: int, lambda_geo: float = 1.0,
                         aux_coeff: float = 0.01) -> Callable:
+    ecfg = EngineConfig(n_nodes=k_nodes, local_steps=1,
+                        aggregation="precision")
+
     def step(trainable, frozen, opt_state, batch, gbar):
-        def loss_fn(train):
-            params = lora_mod.combine(train, frozen)
-            logits, aux = T.forward(params, batch, cfg, rt)
-            task_k = _per_node_ce(logits, batch["labels"], k_nodes)
+        def local_step(train_k, opt_k, key_k, gb, _statics, bk):
+            def loss_fn(train):
+                params = lora_mod.combine(train, frozen)
+                model_batch = {n: v for n, v in bk.items()
+                               if not n.startswith("anchor")}
+                logits, aux = T.forward(params, model_batch, cfg, rt)
+                task = cross_entropy_loss(logits, bk["labels"])
 
-            # public-anchor pass (per node) -> Grams -> CKA alignment
-            anch = batch["anchors"]                       # (K, Ba, La)
-            k, ba, la = anch.shape
-            anchor_batch = {"tokens": anch.reshape(k * ba, la)}
-            if "anchor_enc_embeds" in batch:              # audio anchors
-                anchor_batch["enc_embeds"] = \
-                    batch["anchor_enc_embeds"].reshape(
-                        (k * ba,) + batch["anchor_enc_embeds"].shape[2:])
-            _, a_aux = T.forward(params, anchor_batch, cfg, rt)
-            pooled_a = a_aux["pooled"].reshape(k, ba, -1)  # (K, Ba, D)
-            grams = jax.vmap(cka_mod.cosine_gram)(pooled_a)
-            geo_k = jax.vmap(
-                lambda g: 1.0 - cka_mod.cka(g, gbar))(grams)
+                # public-anchor pass -> Gram -> CKA alignment (loss-side
+                # gram stays the differentiable jnp reference; the server
+                # side gram goes through the engine's backend dispatch)
+                anchor_batch = {"tokens": bk["anchors"]}
+                if "anchor_enc_embeds" in bk:              # audio anchors
+                    anchor_batch["enc_embeds"] = bk["anchor_enc_embeds"]
+                _, a_aux = T.forward(params, anchor_batch, cfg, rt)
+                gram = cka_mod.cosine_gram(a_aux["pooled"])
+                geo = 1.0 - cka_mod.cka(gram, gb)
+                loss = task + lambda_geo * geo \
+                    + aux_coeff * (aux["load_balance"] + aux["router_z"])
+                return loss, (task, geo, aux["pooled"], a_aux["pooled"])
 
-            # LAP precision weights (Eq. 6) — stop-grad, server-side math
-            pooled_b = aux["pooled"].reshape(k, -1, aux["pooled"].shape[-1])
-            u = jax.vmap(unc.lap_uncertainty)(
-                jax.lax.stop_gradient(pooled_b),
-                jax.lax.stop_gradient(pooled_a))          # (K, b_loc)
-            p = jax.vmap(unc.node_precision)(u)
-            w = jax.lax.stop_gradient(unc.precision_weights(p))
+            grads, (task, geo, pooled, pooled_a) = \
+                jax.grad(loss_fn, has_aux=True)(train_k)
+            new_train, new_opt = opt.update(grads, opt_k, train_k)
+            return new_train, new_opt, key_k, {
+                "task": task, "geo": geo,
+                "pooled": pooled, "pooled_a": pooled_a}
 
-            loss = (w * (task_k + lambda_geo * geo_k)).sum()
-            loss = loss + aux_coeff * (aux["load_balance"] + aux["router_z"])
-            metrics = {"task": task_k.mean(), "geo": geo_k.mean(),
-                       "weights": w, "gbar_new": grams.mean(0)}
-            return loss, metrics
+        # LM nodes ship every trainable leaf; one width bucket.  The engine
+        # is built per TRACE (construction is trace-time-cheap): the local
+        # step closes over `frozen` and the shipped mask mirrors
+        # `trainable`, both of which are arguments of this jitted step.
+        # jit=False inlines the round into the caller's compilation
+        # boundary (dryrun/tests own jit, shardings and donation).
+        shipped = jax.tree.map(lambda p: None if p is None else True,
+                               trainable, is_leaf=lambda x: x is None)
+        engine = RoundEngine(ecfg, opt, local_step, (shipped,), jit=False)
 
-        grads, metrics = jax.grad(loss_fn, has_aux=True)(trainable)
-        new_train, new_opt = opt.update(grads, opt_state, trainable)
-        return new_train, new_opt, metrics["gbar_new"], \
-            {"task": metrics["task"], "geo": metrics["geo"]}
+        def bcast(x):
+            return jnp.broadcast_to(x, (k_nodes,) + x.shape)
+
+        def node_split(name, x):
+            if name.startswith("anchor"):
+                return x                                  # already (K, ...)
+            return x.reshape((k_nodes, x.shape[0] // k_nodes) + x.shape[1:])
+
+        node_batch = {n: node_split(n, v) for n, v in batch.items()}
+        batches = jax.tree.map(lambda x: x[None], node_batch)     # E=1
+        node_train = _none_map(bcast, trainable)
+        node_opt = {"m": _none_map(bcast, opt_state["m"]),
+                    "v": _none_map(bcast, opt_state["v"]),
+                    "step": bcast(opt_state["step"])}
+        keys = jnp.zeros((k_nodes, 2), jnp.uint32)        # data comes in
+
+        trains, opts, _, new_gbar, metrics = engine.round_fn(
+            (node_train,), (node_opt,), (keys,), gbar, (None,), (batches,))
+
+        # every leaf is shipped, so each node row holds the precision-
+        # weighted average — the server state is row 0
+        new_train = _none_map(lambda x: x[0], trains[0])
+        w = metrics["weights"].astype(jnp.float32)
+        wavg = lambda x: jnp.tensordot(w, x, axes=1).astype(x.dtype)
+        new_opt = {"m": _none_map(wavg, opts[0]["m"]),
+                   "v": _none_map(wavg, opts[0]["v"]),
+                   "step": opts[0]["step"][0]}
+        return new_train, new_opt, new_gbar, \
+            {"task": metrics["scalars"]["task"].mean(),
+             "geo": metrics["scalars"]["geo"].mean()}
 
     return step
 

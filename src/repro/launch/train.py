@@ -7,8 +7,10 @@ scanned vmap with ZERO cross-node communication, and each round closes with
 the server step (consensus Gram + LAP precision weighting + side-car
 averaging + broadcast) inside the SAME compiled call.  One jit dispatch per
 round, with host-side work reduced to prefetching the (E, K, B, S) token
-batches.  Communication per round is low-rank-sized — the paper's
-efficiency claim, printed per round.
+batches.  LM nodes all share one width, so the bucketed engine runs with a
+single bucket; round-state buffers (train/opt/keys/gbar) are donated, so
+each round's outputs alias the next round's inputs.  Communication per
+round is low-rank-sized — the paper's efficiency claim, printed per round.
 
   PYTHONPATH=src python -m repro.launch.train --arch fedmm-small \
       --rounds 3 --local-steps 4 --batch 8 --seq 128 --tiny
@@ -101,17 +103,18 @@ def main(argv=None):
             "pooled": pooled, "pooled_a": pooled_a}
 
     # LM nodes have no node-local adapters: every trainable leaf is shipped
+    # and every node shares one width — a single engine bucket
     shipped = jax.tree.map(lambda p: None if p is None else True,
                            trainable, is_leaf=lambda x: x is None)
     engine = RoundEngine(
         EngineConfig(n_nodes=k_nodes, local_steps=args.local_steps,
                      aggregation=("precision" if args.precision_weighting
                                   else "uniform")),
-        opt, local_step, shipped)
+        opt, local_step, (shipped,))
 
-    node_train = _broadcast_tree(trainable, k_nodes)
-    node_opt = jax.vmap(opt.init)(node_train)
-    node_keys = jax.random.split(jax.random.fold_in(key, 3), k_nodes)
+    node_train = (_broadcast_tree(trainable, k_nodes),)
+    node_opt = (jax.vmap(opt.init)(node_train[0]),)
+    node_keys = (jax.random.split(jax.random.fold_in(key, 3), k_nodes),)
     gbar = jnp.eye(args.anchors)
 
     streams = [iter(SyntheticLMStream(cfg.vocab_size, args.seq, args.batch,
@@ -130,7 +133,7 @@ def main(argv=None):
                                              *per_node))
         batches = jax.tree.map(lambda *xs: jnp.stack(xs), *step_batches)
         node_train, node_opt, node_keys, gbar, metrics = engine.round_fn(
-            node_train, node_opt, node_keys, gbar, None, batches)
+            node_train, node_opt, node_keys, gbar, (None,), (batches,))
         task = metrics["scalars"]["task"].mean()
         geo = metrics["scalars"]["geo"].mean()
         w = metrics["weights"]

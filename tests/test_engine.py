@@ -1,6 +1,7 @@
 """Engine equivalence: the node-stacked single-dispatch round engine must
 reproduce the sequential per-node reference (same RNG streams, padded-width
 adapters, static corrupt/bridge/synthetic branch masks)."""
+import jax
 import numpy as np
 import pytest
 
@@ -84,8 +85,9 @@ def test_round_is_single_jitted_call(monkeypatch):
 
 
 def test_shard_map_path_matches_vmap_path():
-    """mesh= maps the node axis onto the mesh batch axes via shard_map; on
-    the 1-device local mesh it must agree with the plain vmapped engine."""
+    """mesh= maps each bucket's node axis onto the mesh batch axes via
+    shard_map; on the 1-device local mesh it must agree with the plain
+    vmapped engine."""
     from repro.launch.mesh import make_local_mesh
     fed = FederationConfig(method="geolora", rounds=1, corrupt_nodes=(1,),
                            **{k: v for k, v in BASE.items()
@@ -93,3 +95,135 @@ def test_shard_map_path_matches_vmap_path():
     ha = Federation(fed, TINY).run()
     hb = Federation(fed, TINY, mesh=make_local_mesh()).run()
     _assert_histories_close(ha, hb, tol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# width bucketing: the full 4-modality mix (192..2048-dim tokenizers)
+MIXED = dict(n_nodes=4, rounds=2, local_steps=2, local_batch=8,
+             modalities=("image", "text", "genetics", "tabular"),
+             anchors_per_class=2, n_tokens=4, lora_rank=4)
+
+
+def test_bucket_layout_mixed_width():
+    """4 modalities -> one node each -> 4 distinct widths; a bridge node's
+    width is the max of its two adapters, moving it into the text bucket.
+    The stable permutation concatenates buckets in ascending width."""
+    fed = FederationConfig(method="geolora", bridge_nodes=(0,),
+                           bridge_modality="text", **MIXED)
+    f = Federation(fed, TINY)
+    # node0 image+text bridge -> 2048; node1 text -> 2048; node2 genetics
+    # -> 768; node3 tabular -> 192
+    assert f._bucket_widths == (192, 768, 2048)
+    assert f._buckets == ((3,), (2,), (0, 1))
+    assert f.engine.ecfg.node_perm == (3, 2, 0, 1)
+    # per-bucket adapters are padded to the BUCKET width, not d_max
+    assert f._trains[0]["adapter"]["w"].shape == \
+        (1, 192, TINY.d_model)
+    assert f._trains[2]["adapter"]["w"].shape == \
+        (2, 2048, TINY.d_model)
+
+
+def test_bucketed_engine_matches_sequential_mixed_width():
+    """Oracle equivalence on the heterogeneous-width regime the paper
+    targets: image/text/genetics/tabular nodes with corrupt + bridge +
+    synthetic-anchor heterogeneity, run as W=3 width buckets inside one
+    compiled round, must reproduce the sequential per-node reference."""
+    fed = FederationConfig(method="geodora", aggregation="precision",
+                           bridge_nodes=(0,), bridge_modality="text",
+                           corrupt_nodes=(2,), synthetic_anchor_nodes=(3,),
+                           **MIXED)
+    hs = SequentialFederation(fed, TINY).run()
+    he = Federation(fed, TINY).run()
+    _assert_histories_close(hs, he)
+
+
+def test_bucketed_matches_padded_engine():
+    """width_bucketing=False restores the legacy pad-to-max-width single
+    bucket; both layouts must produce the same history (zero-padding is
+    exact, bucketing only removes dead padded compute)."""
+    fed = FederationConfig(method="geolora", corrupt_nodes=(1,), **MIXED)
+    hb = Federation(fed, TINY).run()
+    hp = Federation(fed, TINY, width_bucketing=False).run()
+    # measured gap is ~1e-7..3e-6; the suite-standard 1e-4 leaves headroom
+    # for XLA codegen variation in the 2048-wide padded matmuls
+    _assert_histories_close(hb, hp)
+    f = Federation(fed, TINY, width_bucketing=False)
+    assert f._buckets == ((0, 1, 2, 3),)
+    assert f._bucket_widths == (2048,)
+
+
+def test_mesh_unshardable_buckets_fall_back_to_padded_layout():
+    """A mesh whose shard count divides K but not every bucket (e.g. one
+    node per width on a 2-slice mesh) must fall back to the single
+    pad-to-max bucket instead of rejecting a config the pre-bucketing
+    engine accepted; a 1-slice mesh keeps the bucketed layout."""
+    fed = FederationConfig(method="geolora", **MIXED)
+    f = Federation(fed, TINY)                     # no mesh: 4 buckets of 1
+    widths = [f._node_width(n) for n in f.nodes]
+    assert len(f._buckets) == 4
+
+    class FakeMesh:
+        shape = {"data": 2, "model": 1}
+
+    bw, buckets = f._bucket_layout(widths, FakeMesh())
+    assert bw == (2048,) and buckets == [tuple(range(4))]
+
+    class OneSlice:
+        shape = {"data": 1, "model": 1}
+
+    bw1, buckets1 = f._bucket_layout(widths, OneSlice())
+    assert len(buckets1) == 4 and bw1 == f._bucket_widths
+
+
+def test_round_state_buffers_are_donated():
+    """donate_argnums: after a round, the PREVIOUS round-state buffers
+    (stacked trainables / opt moments / keys / gbar) must be invalidated —
+    their memory was reused for the outputs (the halve-peak-memory claim).
+    Statics (anchors, tokenizer weights) are NOT donated and stay live."""
+    fed = FederationConfig(method="geolora", **BASE)
+    f = Federation(fed, TINY)
+    old_train = f._trains[0]["cls_head"]["w"]
+    old_keys = f._keys[0]
+    old_gbar = f.gbar
+    anchors = f._staticss[0]["anchors"]
+    f.run_round()
+    assert old_train.is_deleted() and old_keys.is_deleted()
+    assert old_gbar.is_deleted()
+    assert not anchors.is_deleted()
+    # opt-out: donate=False keeps the inputs alive
+    g = Federation(fed, TINY, donate=False)
+    keep = g._trains[0]["cls_head"]["w"]
+    g.run_round()
+    assert not keep.is_deleted()
+
+
+def test_checkpoint_roundtrip_through_bucket_permutation(tmp_path):
+    """Engine checkpoints store the bucketed state; a restore into a fresh
+    mixed-width federation must land every node back at its bucket row —
+    the next round is identical to the uninterrupted run and the unpadded
+    per-node views keep the reference's ragged shapes."""
+    import os
+    fed = FederationConfig(method="geolora", aggregation="precision",
+                           bridge_nodes=(0,), bridge_modality="text",
+                           **MIXED)
+
+    f1 = Federation(fed, TINY)
+    f1.run_round()
+    path = os.path.join(tmp_path, "fed_bucketed.npz")
+    f1.save(path)
+    r_cont = f1.run_round()
+
+    f2 = Federation(fed, TINY)
+    assert f2.restore(path) == 1
+    r_resumed = f2.run_round()
+    assert abs(r_cont["task_loss"] - r_resumed["task_loss"]) < 1e-5
+    assert abs(r_cont["cross_node_cka"] - r_resumed["cross_node_cka"]) < 1e-5
+    np.testing.assert_allclose(r_cont["weights"], r_resumed["weights"],
+                               atol=1e-6)
+    # views go through the permutation and strip the bucket padding
+    for i, node in enumerate(f2.nodes):
+        d = f2.tokenizers[node["modality"]].d_out
+        assert node["trainable"]["adapter"]["w"].shape[0] == d
+        for a, b in zip(jax.tree.leaves(f1.nodes[i]["trainable"]),
+                        jax.tree.leaves(node["trainable"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

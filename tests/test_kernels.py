@@ -29,6 +29,35 @@ def test_gram_kernel(b, d, dtype):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol)
 
 
+@pytest.mark.parametrize("b,d", [(8, 32), (33, 96)])
+def test_gram_kernel_matches_core_cka(b, d):
+    """The engine's server-side Gram dispatch target: the Pallas kernel in
+    interpret mode must match ``core.cka.cosine_gram`` (the reference the
+    engine uses off-TPU) to float32 tolerance."""
+    from repro.core.cka import cosine_gram
+    x = rnd(17, (b, d))
+    got = cosine_gram_pallas(x, block=32, interpret=True)
+    want = cosine_gram(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_engine_gram_backend_dispatch():
+    """RoundEngine's ``gram_backend='pallas'`` path (interpret mode on CPU)
+    must agree with the reference backend through a full engine round."""
+    from repro.core.engine import EngineConfig, RoundEngine
+    k, ba, dm = 3, 8, 16
+    pooled_a = rnd(18, (k, ba, dm))
+    ref_eng = RoundEngine(
+        EngineConfig(n_nodes=k, local_steps=1, gram_backend="reference"),
+        None, lambda *a: None, ({},))
+    pal_eng = RoundEngine(
+        EngineConfig(n_nodes=k, local_steps=1, gram_backend="pallas"),
+        None, lambda *a: None, ({},))
+    np.testing.assert_allclose(np.asarray(pal_eng._grams_of(pooled_a)),
+                               np.asarray(ref_eng._grams_of(pooled_a)),
+                               atol=1e-5)
+
+
 @pytest.mark.parametrize("m,k,n,r", [(16, 32, 24, 4), (70, 100, 90, 8),
                                      (128, 256, 128, 16)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
