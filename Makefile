@@ -13,10 +13,18 @@ bench:
 bench-fed:
 	PYTHONPATH=src python -m benchmarks.federation_round
 
-# tiny-config bench harness smoke (the CI invocation)
+# tiny-config bench harness smoke (the CI invocation; includes the fused
+# M=2 round-block row and writes BENCH_federation.smoke.json, uploaded as
+# a CI artifact)
 bench-fed-smoke:
 	PYTHONPATH=src python -m benchmarks.federation_round --smoke
 
 train-smoke:
 	PYTHONPATH=src python -m repro.launch.train --tiny --rounds 2 \
 		--local-steps 2 --batch 2 --seq 32 --anchors 6 --nodes 2
+
+# fused-block driver smoke: 4 rounds as two M=2 donated dispatches
+train-smoke-fused:
+	PYTHONPATH=src python -m repro.launch.train --tiny --rounds 4 \
+		--block-size 2 --local-steps 2 --batch 2 --seq 32 --anchors 6 \
+		--nodes 2

@@ -1,5 +1,6 @@
 """Round-latency benchmark: sequential per-node loop vs node-stacked engine,
-plus the width-bucketed vs pad-to-max-width engine layouts.
+width-bucketed vs pad-to-max-width layouts, fused multi-round blocks, and
+the server-step Gram backend.
 
 The sequential reference dispatches one jitted step per node per local step
 (K x E per round) and tokenizes each batch eagerly on the host; the engine
@@ -16,6 +17,14 @@ tokenizer width inside the same single-dispatch round.  A peak-memory
 column (XLA ``memory_analysis`` on the compiled round) reports the
 round-state donation savings: donated buffers alias outputs onto inputs,
 so peak round-state memory stays ~1x instead of 2x.
+
+``fused_rounds_m{M}`` rows measure the block executor (``run_block``:
+lax.scan over M whole rounds, donated carry) against the per-round engine:
+ms/round, dispatches and blocking host syncs per round (both 1/M fused),
+and the compiled block's peak bytes.  The ``gram_backend`` row compares the
+reference jnp Gram against the Pallas kernel (interpret mode on CPU — the
+dispatch-correctness datapoint; the performance target is TPU) on the
+server step.
 
 Run: PYTHONPATH=src python -m benchmarks.federation_round [--quick|--smoke]
 """
@@ -56,14 +65,17 @@ def _time_rounds(f, rounds: int) -> float:
     return best * 1e3
 
 
-def _peak_bytes(f: Federation) -> int:
-    """Estimated peak live bytes of one compiled round: arguments + outputs
-    + XLA temporaries, minus the donated input/output aliases."""
-    args = (f._trains, f._opts, f._keys, f.gbar, f._staticss,
+def _peak_bytes(f: Federation, block_m: int = None) -> int:
+    """Estimated peak live bytes of one compiled round (or, with
+    ``block_m``, one fused M-round block): arguments + outputs + XLA
+    temporaries, minus the donated input/output aliases."""
+    args = (f._trains, f._opts, f._keys, f.gbar, f._server_m, f._staticss,
             (None,) * len(f._trains))
-    ma = f.engine.round_fn.lower(*args).compile().memory_analysis()
+    fn = f.engine.round_fn if block_m is None else f.engine.block_fn(block_m)
+    ma = fn.lower(*args).compile().memory_analysis()
     return int(ma.argument_size_in_bytes + ma.output_size_in_bytes
                + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+
 
 
 def bench_cfg(name: str, k: int, modalities, rounds: int) -> dict:
@@ -132,6 +144,93 @@ def bench_mixed_bucketed(name: str, k: int, modalities, rounds: int) -> dict:
     return row
 
 
+def bench_fused_rounds(name: str, k: int, modalities, reps: int,
+                       m: int) -> dict:
+    """Per-round engine (1 dispatch + 1 blocking host sync per round) vs
+    the fused M-round block executor (1 donated dispatch + 1 sync per M
+    rounds: lax.scan over the round body, metrics in (M, ...) buffers).
+
+    Uses a light round config (the high-round-rate regime the fusion
+    targets, where the host round-trip is a visible slice of the round)
+    and INTERLEAVES the two timings rep by rep so slow machine-load drift
+    cancels instead of biasing whichever variant ran later."""
+    fedcfg = FederationConfig(
+        n_nodes=k, rounds=1, local_steps=LOCAL_STEPS, local_batch=4,
+        method="geolora", lora_rank=2, anchors_per_class=1, n_tokens=2,
+        modalities=modalities)
+    per_round = Federation(fedcfg, TINY)
+    fused = Federation(fedcfg, TINY)
+    per_round_peak = _peak_bytes(per_round)
+    fused_peak = _peak_bytes(fused, block_m=m)
+    for _ in range(m):                     # warmup + compile both variants
+        per_round.run_round()
+    fused.run_rounds(m, block_size=m)
+    best_r = best_f = float("inf")
+    # small M means short timed spans; take more reps so a transient
+    # contention burst cannot bias a whole variant
+    reps = max(reps, 32 // m)
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(m):
+            per_round.run_round()
+        best_r = min(best_r, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fused.run_rounds(m, block_size=m)
+        best_f = min(best_f, time.perf_counter() - t0)
+    per_round_ms = best_r / m * 1e3
+    fused_ms = best_f / m * 1e3
+
+    row = {
+        "name": name,
+        "k_nodes": k,
+        "modalities": list(modalities),
+        "local_steps": LOCAL_STEPS,
+        "block_rounds": m,
+        "per_round_engine_ms_per_round": round(per_round_ms, 2),
+        "fused_ms_per_round": round(fused_ms, 2),
+        "fused_speedup": round(per_round_ms / fused_ms, 2),
+        # dispatch / sync structure: the per-round driver issues one jitted
+        # call and blocks once (metric readback) per round; the block
+        # executor amortises both over M rounds
+        "dispatches_per_round": round(1.0 / m, 4),
+        "host_syncs_per_round": round(1.0 / m, 4),
+        "per_round_dispatches_per_round": 1,
+        "per_round_host_syncs_per_round": 1,
+        "peak_bytes_per_round_engine": per_round_peak,
+        "peak_bytes_fused_block": fused_peak,
+    }
+    print(f"{name} K={k} M={m}: per-round={per_round_ms:.1f}ms "
+          f"fused={fused_ms:.1f}ms/round "
+          f"(x{row['fused_speedup']}, dispatches/round 1 -> 1/{m}) "
+          f"peak {fused_peak/1e6:.1f}MB vs {per_round_peak/1e6:.1f}MB",
+          flush=True)
+    return row
+
+
+def bench_gram_backend(name: str, k: int, modalities, rounds: int) -> dict:
+    """Server-step Gram backend: reference jnp vs the Pallas kernel (MXU
+    path on TPU; interpret mode here, so the CPU number is a correctness /
+    dispatch-overhead datapoint, not a kernel speed claim)."""
+    fedcfg = _fedcfg(k, modalities)
+    ref_ms = _time_rounds(Federation(fedcfg, TINY,
+                                     gram_backend="reference"), rounds)
+    pal_ms = _time_rounds(Federation(fedcfg, TINY,
+                                     gram_backend="pallas"), rounds)
+    row = {
+        "name": name,
+        "k_nodes": k,
+        "modalities": list(modalities),
+        "local_steps": LOCAL_STEPS,
+        "reference_ms_per_round": round(ref_ms, 2),
+        "pallas_interpret_ms_per_round": round(pal_ms, 2),
+        "backend_note": ("pallas runs in interpreter mode on CPU; "
+                         "the MXU-tiled path targets TPU"),
+    }
+    print(f"{name} K={k}: gram reference={ref_ms:.1f}ms "
+          f"pallas(interpret)={pal_ms:.1f}ms", flush=True)
+    return row
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -147,16 +246,31 @@ def main() -> None:
         sweep_modalities = ("genetics", "tabular")
         mixed = ("genetics", "tabular")
         mixed_k = 2
+        fused_ms = (2,)                    # CI smoke: M=2 fused block
+        fused_modalities = ("genetics", "tabular")
+        gram_k = 2
     else:
         ks = (4, 8) if args.quick else (4, 8, 16)
         rounds = 2 if args.quick else 3
         sweep_modalities = ("image", "text")
         mixed = MIXED_MODALITIES
         mixed_k = 8
+        fused_ms = (4,) if args.quick else (4, 16)
+        # narrow tokenizers keep per-round compute small: the high-round-
+        # rate regime where the host round-trip (dispatch + blocking metric
+        # readback) is a visible fraction of the round — what block fusion
+        # amortises
+        fused_modalities = ("genetics", "tabular")
+        gram_k = 8
     rows = [bench_cfg(f"round_latency_k{k}", k, sweep_modalities, rounds)
             for k in ks]
     rows.append(bench_mixed_bucketed(
         f"mixed_width_bucketed_k{mixed_k}", mixed_k, mixed, rounds))
+    rows += [bench_fused_rounds(f"fused_rounds_m{m}", mixed_k,
+                                fused_modalities, rounds, m)
+             for m in fused_ms]
+    rows.append(bench_gram_backend(f"gram_backend_k{gram_k}", gram_k,
+                                   sweep_modalities, rounds))
     results = {
         "bench": "federation_round_latency",
         "model": "fedmm-small (reduced: 2L/64d)",

@@ -1,3 +1,4 @@
-from repro.checkpoint.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint.checkpoint import (load_checkpoint, read_meta,
+                                         save_checkpoint)
 
-__all__ = ["save_checkpoint", "load_checkpoint"]
+__all__ = ["save_checkpoint", "load_checkpoint", "read_meta"]

@@ -33,16 +33,21 @@ def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
     return out, (treedef, metas)
 
 
-def save_checkpoint(path: str, tree, step: int = 0) -> None:
+def save_checkpoint(path: str, tree, step: int = 0,
+                    meta: Dict[str, Any] = None) -> None:
+    """``meta`` is an optional JSON-serialisable dict stored alongside the
+    tree (e.g. the federation records its server-opt config so a restore
+    into a mismatched block-carry structure fails loudly); read it back
+    with ``read_meta``."""
     arrays, (treedef, metas) = _flatten(tree)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    meta = {"treedef": str(treedef), "dtypes": metas, "step": step,
-            "n_leaves": len(metas)}
+    header = {"treedef": str(treedef), "dtypes": metas, "step": step,
+              "n_leaves": len(metas), "user_meta": meta or {}}
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
                                suffix=".tmp")
     os.close(fd)
     try:
-        np.savez(tmp, __meta__=json.dumps(meta), **arrays)
+        np.savez(tmp, __meta__=json.dumps(header), **arrays)
         src = tmp if tmp.endswith(".npz") else tmp + ".npz"
         if not os.path.exists(src):      # np.savez appends .npz
             src = tmp
@@ -51,6 +56,13 @@ def save_checkpoint(path: str, tree, step: int = 0) -> None:
         for f in (tmp, tmp + ".npz"):
             if os.path.exists(f):
                 os.remove(f)
+
+
+def read_meta(path: str) -> Dict[str, Any]:
+    """User metadata stored by ``save_checkpoint(..., meta=...)`` (empty
+    dict for checkpoints written before meta support existed)."""
+    with np.load(path, allow_pickle=False) as data:
+        return json.loads(str(data["__meta__"])).get("user_meta", {})
 
 
 def load_checkpoint(path: str, like) -> Tuple[Any, int]:

@@ -30,7 +30,17 @@ of K x E separate jit dispatches:
     axes via ``shard_map`` and the server step becomes ``psum`` /
     ``all_gather`` collectives whose payload is low-rank-sized (the paper's
     communication claim, now visible as the program's only cross-slice
-    traffic).
+    traffic);
+  - ``run_block(state, M)`` fuses M whole rounds into ONE dispatch: the
+    round body above becomes the body of a ``jax.lax.scan`` over rounds, the
+    carry is (trains, opts, keys, gbar, server-opt state) and is donated, so
+    at production round rates the host pays one dispatch and zero blocking
+    syncs per M rounds instead of one each per round.  Per-round batches are
+    either pre-staged as an (M, E, K, ...) leaf-stacked tensor scanned over,
+    or drawn on-device from the carried RNG streams (``batches=None``);
+    per-round metrics accumulate into (M, ...) device buffers returned at
+    block end, with an optional ``io_callback`` tap that streams each
+    round's metrics to a host logger without forcing a sync.
 
 The engine is workload-agnostic: ``local_step`` owns the loss (multimodal
 classification in ``core.federation``, LM fine-tuning in ``launch.train``,
@@ -79,6 +89,12 @@ class EngineConfig:
     # elsewhere), "reference" (core.cka), or "pallas" (kernels.gram; runs
     # in interpreter mode off-TPU so it stays testable on CPU).
     gram_backend: str = "auto"
+    # server-side FedOpt: momentum coefficient applied to the round's
+    # pseudo-gradient (broadcast value of the previous round minus the
+    # precision-weighted average) before re-broadcasting.  ``None`` disables
+    # the feature entirely (exact legacy server step, no extra carried
+    # state); 0.0 keeps the state but reduces to the plain average.
+    server_momentum: Optional[float] = None
 
 
 def pad_axis(x: Array, width: int, axis: int = -1) -> Array:
@@ -163,7 +179,9 @@ class RoundEngine:
         if self._gram_backend == "auto":
             self._gram_backend = ("pallas" if jax.default_backend() == "tpu"
                                   else "reference")
-        donate = (0, 1, 2, 3) if ecfg.donate else ()
+        donate = (0, 1, 2, 3, 4) if ecfg.donate else ()
+        self._block_cache = {}
+        self._tap_holders = {}
         if mesh is None:
             # jit=False leaves round_fn as the plain round body, for callers
             # that inline the round into their own compilation boundary
@@ -196,10 +214,7 @@ class RoundEngine:
             fn = functools.partial(
                 cosine_gram_pallas,
                 interpret=(jax.default_backend() != "tpu"))
-            # K is static and small; the unrolled loop sidesteps
-            # vmap-of-pallas_call batching rules
-            return jnp.stack([fn(pooled_a[i])
-                              for i in range(pooled_a.shape[0])])
+            return jax.vmap(fn)(pooled_a)
         return jax.vmap(cka_mod.cosine_gram)(pooled_a)
 
     def _unpermute(self, x: Array) -> Array:
@@ -207,6 +222,44 @@ class RoundEngine:
         if self._inv_perm is None:
             return x
         return jnp.take(x, jnp.asarray(self._inv_perm), axis=0)
+
+    # ------------------------------------------------------------------
+    # server-side FedOpt (optional): momentum on the averaged side-cars
+    def init_server_state(self, trains):
+        """Zero FedOpt momentum tree, shaped like the shipped-leaf average
+        (None at non-shipped leaves); ``None`` when the knob is off, so the
+        legacy path carries no extra state."""
+        if self.ecfg.server_momentum is None:
+            return None
+        none = lambda x: x is None
+        return jax.tree.map(
+            lambda l, m: (jnp.zeros(l.shape[1:], jnp.float32)
+                          if (l is not None and m) else None),
+            trains[0], self.shipped_masks[0], is_leaf=none)
+
+    def _server_prev(self, trains):
+        """The value the server broadcast LAST round: shipped rows are
+        identical across nodes at round start, so row 0 of bucket 0 is the
+        server's previous iterate (float32, None at non-shipped leaves)."""
+        none = lambda x: x is None
+        return jax.tree.map(
+            lambda l, m: (l[0].astype(jnp.float32)
+                          if (l is not None and m) else None),
+            trains[0], self.shipped_masks[0], is_leaf=none)
+
+    def _apply_server_momentum(self, prev, total, server_m):
+        """FedAvgM server step: pseudo-gradient = prev - avg; momentum
+        accumulates it and the server re-broadcasts prev - m.  With
+        beta == 0 this reduces to broadcasting the plain average."""
+        beta = float(self.ecfg.server_momentum)
+        none = lambda x: x is None
+        new_m = jax.tree.map(
+            lambda sm, p, t: None if t is None else beta * sm + (p - t),
+            server_m, prev, total, is_leaf=none)
+        new_val = jax.tree.map(
+            lambda p, m_: None if p is None else p - m_,
+            prev, new_m, is_leaf=none)
+        return new_m, new_val
 
     # ------------------------------------------------------------------
     def _local_epochs(self, train, opt_state, keys, gbar, statics, batches):
@@ -230,8 +283,9 @@ class RoundEngine:
         return train, opt_state, keys, last
 
     # ------------------------------------------------------------------
-    def _round(self, trains, opts, keys, gbar, statics, batches):
+    def _round(self, trains, opts, keys, gbar, server_m, statics, batches):
         k = self.ecfg.n_nodes
+        prev = None if server_m is None else self._server_prev(trains)
         trains, opts, keys = list(trains), list(opts), list(keys)
         lasts = []
         # static Python loop over buckets: W sub-vmaps, ONE compiled round
@@ -252,8 +306,18 @@ class RoundEngine:
                 unc.batched_precisions(pooled, pooled_a))
         else:
             weights = jnp.full((k,), 1.0 / k, jnp.float32)
-        trains = agg.weighted_average_bucketed(
-            tuple(trains), weights, self.shipped_masks, self.bucket_sizes)
+        if server_m is None:
+            trains = agg.weighted_average_bucketed(
+                tuple(trains), weights, self.shipped_masks,
+                self.bucket_sizes)
+        else:
+            total = agg.bucketed_partial_sums(
+                tuple(trains), weights, self.shipped_masks,
+                self.bucket_sizes)
+            server_m, new_val = self._apply_server_momentum(
+                prev, total, server_m)
+            trains = agg.broadcast_into_buckets(
+                tuple(trains), self.shipped_masks, new_val)
         metrics = {
             "scalars": {name: self._unpermute(v)
                         for name, v in scalars.items()},
@@ -261,10 +325,12 @@ class RoundEngine:
             "cross_node_cka": cka_mod.mean_offdiag_cka(
                 grams, center=self.ecfg.center_cka),
         }
-        return tuple(trains), tuple(opts), tuple(keys), new_gbar, metrics
+        return (tuple(trains), tuple(opts), tuple(keys), new_gbar, server_m,
+                metrics)
 
     # ------------------------------------------------------------------
-    def _round_sharded(self, trains, opts, keys, gbar, statics, batches):
+    def _round_sharded(self, trains, opts, keys, gbar, server_m, statics,
+                       batches):
         """shard_map path: each bucket's node axis split over the mesh
         batch axes; the server step's cross-slice traffic is exactly the
         protocol's uplink (Grams + precisions + shipped side-cars)."""
@@ -274,7 +340,8 @@ class RoundEngine:
         batch_specs = tuple(P() if b is None else P(None, ax)
                             for b in batches)
 
-        def inner(trains, opts, keys, gbar, statics, batches):
+        def inner(trains, opts, keys, gbar, server_m, statics, batches):
+            prev = None if server_m is None else self._server_prev(trains)
             trains, opts, keys = list(trains), list(opts), list(keys)
             lasts = []
             for b in range(self.n_buckets):
@@ -306,6 +373,11 @@ class RoundEngine:
             total = jax.tree.map(
                 lambda a: None if a is None else jax.lax.psum(a, ax),
                 total, is_leaf=lambda x: x is None)
+            if server_m is not None:
+                # prev and total are replicated here, so the momentum
+                # update needs no extra collective
+                server_m, total = self._apply_server_momentum(
+                    prev, total, server_m)
             trains = list(agg.broadcast_into_buckets(
                 tuple(trains), self.shipped_masks, total))
 
@@ -330,14 +402,81 @@ class RoundEngine:
                 "cross_node_cka": cka_mod.mean_offdiag_cka(
                     grams_all, center=self.ecfg.center_cka),
             }
-            return tuple(trains), tuple(opts), tuple(keys), new_gbar, metrics
+            return (tuple(trains), tuple(opts), tuple(keys), new_gbar,
+                    server_m, metrics)
 
         return _shard_map(
             inner, mesh=self.mesh,
-            in_specs=(node_spec, node_spec, node_spec, P(), node_spec,
+            in_specs=(node_spec, node_spec, node_spec, P(), P(), node_spec,
                       batch_specs),
-            out_specs=(node_spec, node_spec, node_spec, P(), P()),
-        )(trains, opts, keys, gbar, statics, batches)
+            out_specs=(node_spec, node_spec, node_spec, P(), P(), P()),
+        )(trains, opts, keys, gbar, server_m, statics, batches)
+
+    # ------------------------------------------------------------------
+    # fused multi-round blocks: lax.scan over M whole rounds, one dispatch
+    def block_fn(self, m: int, *, tap=None):
+        """Compiled M-round block: ``jax.lax.scan`` over the round body with
+        the (trains, opts, keys, gbar, server_m) carry DONATED, so M rounds
+        cost one dispatch and zero intermediate host syncs.  ``tap`` is an
+        optional host callback fired once per round (via ``io_callback``,
+        ordered) with that round's metrics — an async log stream that never
+        blocks the device.  Compiled functions are cached per (m, has-tap):
+        the tap routes through a holder read at callback time, so passing a
+        fresh closure per call swaps the target without re-tracing the
+        M-round scan (the LATEST tap handles any still-in-flight blocks;
+        ``jax.effects_barrier()`` drains pending callbacks before swapping
+        if that matters).  Scan traces the round body once, so compile time
+        is ~independent of M."""
+        if m < 1:
+            raise ValueError(f"block size must be >= 1, got {m}")
+        cache_key = (m, tap is not None)
+        if tap is not None:
+            self._tap_holders.setdefault(cache_key, [None])[0] = tap
+        fn = self._block_cache.get(cache_key)
+        if fn is not None:
+            return fn
+        body_fn = self._round if self.mesh is None else self._round_sharded
+        holder = self._tap_holders.get(cache_key)
+
+        def block(trains, opts, keys, gbar, server_m, statics, batches):
+            def body(carry, xs):
+                tr, op, ks, gb, sm = carry
+                tr, op, ks, gb, sm, metrics = body_fn(
+                    tr, op, ks, gb, sm, statics, xs)
+                if holder is not None:
+                    from jax.experimental import io_callback
+                    io_callback(lambda metr: holder[0](metr), None,
+                                metrics, ordered=True)
+                return (tr, op, ks, gb, sm), metrics
+
+            # per-bucket batches carry leading (M, E, k_b, ...) axes and are
+            # scanned over; None buckets sample on-device from the carried
+            # RNG keys.  The stacked ys ARE the (M, ...) metric buffers.
+            (trains, opts, keys, gbar, server_m), metrics = jax.lax.scan(
+                body, (trains, opts, keys, gbar, server_m), batches,
+                length=m)
+            return trains, opts, keys, gbar, server_m, metrics
+
+        donate = (0, 1, 2, 3, 4) if self.ecfg.donate else ()
+        fn = jax.jit(block, donate_argnums=donate)
+        self._block_cache[cache_key] = fn
+        return fn
+
+    def run_block(self, state, m: int, *, statics, batches=None, tap=None):
+        """Run M fused rounds in ONE donated dispatch.
+
+        ``state`` is the round carry ``(trains, opts, keys, gbar,
+        server_m)``; ``batches`` is a per-bucket tuple of either ``None``
+        (draw on-device from the carried RNG stream) or a pytree with
+        leading ``(M, E, k_b, ...)`` axes pre-staged on device.  Returns
+        ``(state, metrics)`` where every metrics leaf gained a leading M
+        axis (round-major).  The call is ASYNC: nothing blocks until the
+        caller materialises an output, so drivers can stage block N+1's
+        batches while block N is in flight."""
+        if batches is None:
+            batches = (None,) * self.n_buckets
+        out = self.block_fn(m, tap=tap)(*state, statics, batches)
+        return out[:5], out[5]
 
 
 def _shard_map(fn, *, mesh, in_specs, out_specs):

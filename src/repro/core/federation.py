@@ -119,6 +119,11 @@ class FederationConfig:
     synthetic_anchor_noise: float = 2.0
     seed: int = 0
     center_cka: bool = False
+    # server-side FedOpt: momentum on the precision-weighted side-car
+    # average (engine-backed ``Federation`` only).  ``None`` = off (exact
+    # legacy server step); 0.0 carries the state but reduces to the plain
+    # average; > 0 accumulates the round pseudo-gradient.
+    server_momentum: Optional[float] = None
 
 
 def _stopgrad_named(tree, names=("dora_m",)):
@@ -416,9 +421,14 @@ class SequentialFederation:
         self.history.append(rec)
         return rec
 
-    def run(self) -> List[dict]:
-        for _ in range(self.fed.rounds):
-            self.run_round()
+    def run_rounds(self, n: int, block_size: int = 1) -> List[dict]:
+        """Run ``n`` rounds.  ``block_size`` is accepted for API parity with
+        the engine-backed ``Federation`` (whose blocks fuse M rounds into
+        one dispatch); the sequential reference always steps per round."""
+        return [self.run_round() for _ in range(n)]
+
+    def run(self, block_size: int = 1) -> List[dict]:
+        self.run_rounds(self.fed.rounds, block_size)
         return self.history
 
     # ------------------------------------------------------------------
@@ -460,9 +470,12 @@ class Federation(SequentialFederation):
     """Width-bucketed node-stacked federation: a thin wrapper over
     ``repro.core.engine.RoundEngine``.  One round — E vmapped local epochs
     per width bucket plus the whole server step — is a single jitted call
-    with donated round-state buffers; pass ``mesh=`` to shard each bucket's
-    node axis over the mesh batch axes (see the module docstring for the
-    architecture).  Public API and history records match the sequential
+    with donated round-state buffers; ``run_rounds(n, block_size=M)`` fuses
+    M whole rounds into one donated dispatch (lax.scan over the round body,
+    on-device batch sampling from the carried RNG streams, one host sync
+    per block); pass ``mesh=`` to shard each bucket's node axis over the
+    mesh batch axes (see the module docstring for the architecture).
+    Public API and history records match the sequential
     reference; per-node views in ``self.nodes`` are materialised lazily
     (unpadded, through the bucket permutation) from the stacked state on
     access.  Checkpoints store the BUCKETED server state and are
@@ -596,10 +609,12 @@ class Federation(SequentialFederation):
             aggregation=fed.aggregation, center_cka=fed.center_cka,
             bucket_sizes=tuple(len(m) for m in buckets),
             node_perm=tuple(i for members in buckets for i in members),
-            donate=self._donate, gram_backend=self._gram_backend)
+            donate=self._donate, gram_backend=self._gram_backend,
+            server_momentum=fed.server_momentum)
         self.engine = engine_mod.RoundEngine(
             ecfg, self.opt, self._make_local_step(), tuple(masks),
             mesh=mesh)
+        self._server_m = self.engine.init_server_state(self._trains)
 
     def _bucket_statics(self, members, wb: int) -> dict:
         """Compile-time constants for one bucket's nodes, padded to the
@@ -649,11 +664,8 @@ class Federation(SequentialFederation):
         """Per-node local step (runs under vmap over the node axis inside
         the engine's scan).  Reproduces the sequential reference exactly:
         same RNG splits, same corrupt/bridge draws, same loss terms."""
-        fed, cfg, opt = self.fed, self.cfg, self.opt
-        protos = self.task.prototypes()
-        n, d_raw = fed.local_batch, self.task.d_raw
-        d_lat, noise = self.task.d_latent, self.task.noise
-        log_probs = jnp.log(jnp.full((fed.n_classes,), 1.0 / fed.n_classes))
+        fed, cfg, opt, dataset = self.fed, self.cfg, self.opt, self.task
+        n = fed.local_batch
         has_bridges = self._has_bridges
         frozen = self.frozen_bridge if has_bridges else self.frozen
         lam, lam_b, center = fed.lambda_geo, fed.lambda_bridge, fed.center_cka
@@ -667,28 +679,13 @@ class Federation(SequentialFederation):
             _, aux = T.forward(params, {"inputs_embeds": embeds}, cfg)
             return aux["pooled"]
 
-        def sample(kb, st):
-            # both branches from the SAME keys as the reference's
-            # task.sample(...), selected by the static corrupt mask
-            k1, k2, k3 = jax.random.split(kb, 3)
-            labels_c = jax.random.categorical(k1, log_probs, shape=(n,))
-            latent = protos[labels_c] \
-                + noise * jax.random.normal(k2, (n, d_lat))
-            out_noise = 0.05 * jax.random.normal(k3, (n, d_raw))
-            raw_c = jnp.tanh(latent @ st["mod_w"] + st["mod_b"]) + out_noise
-            raw_x = jax.random.normal(k2, (n, d_raw))
-            labels_x = jax.random.randint(k1, (n,), 0, fed.n_classes)
-            raw = jnp.where(st["corrupt"], raw_x, raw_c)
-            labels = jnp.where(st["corrupt"], labels_x, labels_c)
-            # bridge pair: identical latent + output-noise draws through the
-            # second modality map (the reference re-samples with the same kb)
-            raw2 = (jnp.tanh(latent @ st["mod2_w"] + st["mod2_b"]) + out_noise
-                    if has_bridges else None)
-            return raw, labels, raw2
-
         def local_step(train, opt_state, key, gbar, st, _batch):
             key, kb = jax.random.split(key)
-            raw, labels, raw2 = sample(kb, st)
+            # in-scan sampling: both node-type branches from the SAME keys
+            # as the reference's task.sample(...), selected per node
+            raw, labels, raw2 = dataset.sample_in_scan(
+                kb, st["mod_w"], st["mod_b"], n, st["corrupt"],
+                mod2_w=st.get("mod2_w"), mod2_b=st.get("mod2_b"))
             tokens = tokenize(raw, st["tok_w1"], st["tok_b1"], st["tok_w2"])
 
             def loss_fn(tr):
@@ -724,23 +721,63 @@ class Federation(SequentialFederation):
     def run_round(self) -> dict:
         # round-state buffers are donated: the previous round's arrays are
         # invalidated by this call and replaced by the outputs
-        (self._trains, self._opts, self._keys, self.gbar, metrics) = \
-            self.engine.round_fn(self._trains, self._opts, self._keys,
-                                 self.gbar, self._staticss,
-                                 (None,) * len(self._trains))
-        s = metrics["scalars"]
-        rec = {
-            "task_loss": float(jnp.mean(s["task"])),
-            "geo_loss": float(jnp.mean(s["geo"])),
-            "acc": float(jnp.mean(s["acc"])),
-            "cross_node_cka": float(metrics["cross_node_cka"]),
-            "weights": [float(w) for w in metrics["weights"]],
-            "uplink_bytes": self._uplink_bytes,
-            "full_model_bytes": self._full_bytes,
-        }
+        (self._trains, self._opts, self._keys, self.gbar, self._server_m,
+         metrics) = self.engine.round_fn(
+            self._trains, self._opts, self._keys, self.gbar, self._server_m,
+            self._staticss, (None,) * len(self._trains))
+        rec = self._metrics_record(metrics)
         self._views_stale = True
         self.history.append(rec)
         return rec
+
+    def _metrics_record(self, metrics, r: Optional[int] = None) -> dict:
+        """One history record from engine metrics — per-round metrics when
+        ``r`` is None, else round ``r`` of a block's stacked (M, ...)
+        metric buffers."""
+        sl = (lambda x: x) if r is None else (lambda x: x[r])
+        s = metrics["scalars"]
+        return {
+            "task_loss": float(jnp.mean(sl(s["task"]))),
+            "geo_loss": float(jnp.mean(sl(s["geo"]))),
+            "acc": float(jnp.mean(sl(s["acc"]))),
+            "cross_node_cka": float(sl(metrics["cross_node_cka"])),
+            "weights": [float(w) for w in sl(metrics["weights"])],
+            "uplink_bytes": self._uplink_bytes,
+            "full_model_bytes": self._full_bytes,
+        }
+
+    def run_rounds(self, n: int, block_size: int = 1,
+                   tap=None) -> List[dict]:
+        """Run ``n`` rounds; with ``block_size`` M > 1, rounds execute as
+        fused M-round blocks (``engine.run_block``): ONE donated dispatch
+        and one host sync per block instead of per round.  Dispatch is
+        async — every block is enqueued before any metric is read back, so
+        the device never waits on the host between blocks; history records
+        materialise after the last block is in flight.  ``block_size=1`` is
+        the exact legacy per-round path.  ``tap`` (block mode) streams each
+        round's metrics to the host via ``io_callback`` without forcing a
+        sync."""
+        if block_size <= 1:
+            return [self.run_round() for _ in range(n)]
+        pending, done = [], 0
+        while done < n:
+            m = min(block_size, n - done)
+            state = (self._trains, self._opts, self._keys, self.gbar,
+                     self._server_m)
+            (self._trains, self._opts, self._keys, self.gbar,
+             self._server_m), metrics = self.engine.run_block(
+                state, m, statics=self._staticss, tap=tap)
+            pending.append((m, metrics))
+            done += m
+        self._views_stale = True
+        recs = [self._metrics_record(metrics, r)
+                for m, metrics in pending for r in range(m)]
+        self.history.extend(recs)
+        if tap is not None:
+            # metric readback does not wait for the io_callback thread;
+            # drain it so every round's tap has fired before returning
+            jax.effects_barrier()
+        return recs
 
     def _unpad_node_tree(self, tree: dict, node: dict) -> dict:
         """Strip the padded widths from one node's slice of a stacked tree
@@ -779,20 +816,36 @@ class Federation(SequentialFederation):
     # deterministically from the config, so a restore into a federation
     # with the same config and ``width_bucketing`` lands every node back
     # at its row through the same permutation
-    def save(self, path: str) -> None:
-        from repro.checkpoint import save_checkpoint
+    def _ckpt_state(self) -> dict:
         state = {"gbar": self.gbar, "train": self._trains,
                  "opt": self._opts, "keys": self._keys}
-        save_checkpoint(path, state, step=len(self.history))
+        if self._server_m is not None:
+            state["server_m"] = self._server_m
+        return state
+
+    def save(self, path: str) -> None:
+        from repro.checkpoint import save_checkpoint
+        # the saved state IS the engine's block carry (trains / opts / keys
+        # / gbar / server-opt), so a save at a block boundary captures
+        # everything a resumed run_block needs to continue bit-identically
+        save_checkpoint(path, self._ckpt_state(), step=len(self.history),
+                        meta={"server_momentum": self.fed.server_momentum,
+                              "n_buckets": len(self._trains)})
 
     def restore(self, path: str) -> int:
-        from repro.checkpoint import load_checkpoint
-        like = {"gbar": self.gbar, "train": self._trains,
-                "opt": self._opts, "keys": self._keys}
-        state, step = load_checkpoint(path, like)
+        from repro.checkpoint import load_checkpoint, read_meta
+        meta = read_meta(path)
+        if meta.get("server_momentum") != self.fed.server_momentum:
+            raise ValueError(
+                f"checkpoint server_momentum={meta.get('server_momentum')} "
+                f"does not match config {self.fed.server_momentum}; the "
+                f"block carry structure differs")
+        state, step = load_checkpoint(path, self._ckpt_state())
         self.gbar = state["gbar"]
         self._trains = state["train"]
         self._opts = state["opt"]
         self._keys = state["keys"]
+        if "server_m" in state:
+            self._server_m = state["server_m"]
         self._views_stale = True
         return step

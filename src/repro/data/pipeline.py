@@ -42,13 +42,59 @@ class SyntheticLMStream:
             for t in range(self.seq_len):
                 rows = cumprobs[toks[:, t]]
                 toks[:, t + 1] = (rows < r[:, t:t + 1]).sum(1)
-            yield {"tokens": jnp.asarray(toks[:, :-1]),
-                   "labels": jnp.asarray(toks[:, 1:])}
+            # host (numpy) batches: consumers stack whole rounds or blocks
+            # and ship ONE device transfer per leaf, so yielding device
+            # arrays here would only add per-batch round-trips
+            yield {"tokens": toks[:, :-1].copy(),
+                   "labels": toks[:, 1:].copy()}
 
 
 def shard_batch(batch: dict, sharding) -> dict:
     """Place a host batch onto devices with the given NamedSharding."""
     return jax.tree.map(lambda x: jax.device_put(x, sharding), batch)
+
+
+def stack_block_batches(grid, sharding=None):
+    """``grid[m][e][k]`` per-(round, step, node) batch pytrees -> ONE pytree
+    with leading ``(M, E, K, ...)`` axes, ready for the fused-round
+    executor's scan.  Leaves are staged host-side (numpy; device-array
+    leaves are pulled back first, so streams should yield numpy) and the
+    whole block ships as one async ``device_put`` per leaf instead of
+    M*E*K small transfers."""
+    def stack(*xs):
+        return np.stack([np.asarray(x) for x in xs])
+
+    block = jax.tree.map(
+        stack, *[jax.tree.map(stack, *[jax.tree.map(stack, *nodes)
+                                       for nodes in rnd])
+                 for rnd in grid])
+    put = (jnp.asarray if sharding is None
+           else lambda x: jax.device_put(x, sharding))
+    return jax.tree.map(put, block)
+
+
+@dataclass
+class BlockStager:
+    """Host-side staging for fused multi-round blocks: pulls M rounds x E
+    steps from the K per-node streams and leaf-stacks them into an
+    ``(M, E, K, ...)`` device tensor.  Drivers double-buffer by calling
+    ``next_block`` for block N+1 right after dispatching block N — the
+    host staging work overlaps the in-flight device block, and because
+    ``device_put`` is async nothing here blocks on the device.
+
+    Streams are consumed in (round, step, node) order, identical to the
+    per-round driver's consumption order, so data is block-size-invariant.
+    """
+    streams: list
+    local_steps: int
+    block_rounds: int
+    sharding: object = None
+
+    def next_block(self, m: Optional[int] = None):
+        m = self.block_rounds if m is None else m
+        grid = [[[next(s) for s in self.streams]
+                 for _ in range(self.local_steps)] for _ in range(m)]
+        return stack_block_batches(grid, self.sharding)
 
 
 def make_lm_batch(key, cfg: ModelConfig, batch: int, seq: int) -> dict:

@@ -76,6 +76,37 @@ class SyntheticMultimodal:
             + 0.05 * jax.random.normal(k3, (n, self.d_raw))
         return raw, labels
 
+    def sample_in_scan(self, key, mod_w: Array, mod_b: Array, n: int,
+                       corrupt: Array, *, mod2_w: Optional[Array] = None,
+                       mod2_b: Optional[Array] = None):
+        """Traceable twin of ``sample`` for compiled round/block bodies
+        (vmap over nodes, lax.scan over steps and rounds): the modality map
+        is passed as arrays instead of looked up by name, and ``corrupt``
+        is a traced selector — both the clean and corrupt branches are
+        drawn from the SAME key splits as ``sample`` and selected per node,
+        so one program serves every node type with reference-identical RNG
+        streams.  With ``mod2_w/b`` (bridge nodes) the identical latent and
+        output-noise draws are pushed through the second modality map,
+        reproducing the reference's re-sample-with-same-key pairing.
+
+        -> (raw (n, d_raw), labels (n,), raw2 (n, d_raw) | None)
+        """
+        k1, k2, k3 = jax.random.split(key, 3)
+        log_probs = jnp.log(jnp.full((self.n_classes,),
+                                     1.0 / self.n_classes))
+        labels_c = jax.random.categorical(k1, log_probs, shape=(n,))
+        latent = self.prototypes()[labels_c] \
+            + self.noise * jax.random.normal(k2, (n, self.d_latent))
+        out_noise = 0.05 * jax.random.normal(k3, (n, self.d_raw))
+        raw_c = jnp.tanh(latent @ mod_w + mod_b) + out_noise
+        raw_x = jax.random.normal(k2, (n, self.d_raw))
+        labels_x = jax.random.randint(k1, (n,), 0, self.n_classes)
+        raw = jnp.where(corrupt, raw_x, raw_c)
+        labels = jnp.where(corrupt, labels_x, labels_c)
+        raw2 = (jnp.tanh(latent @ mod2_w + mod2_b) + out_noise
+                if mod2_w is not None else None)
+        return raw, labels, raw2
+
     def anchor_set(self, key, n_per_class: int = 4
                    ) -> Dict[str, Tuple[Array, Array]]:
         """Public anchors: for each modality, n_per_class *independent*

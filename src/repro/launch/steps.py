@@ -106,8 +106,9 @@ def make_fed_train_step(cfg: ModelConfig, rt: T.Runtime, opt: AdamW, *,
                     "step": bcast(opt_state["step"])}
         keys = jnp.zeros((k_nodes, 2), jnp.uint32)        # data comes in
 
-        trains, opts, _, new_gbar, metrics = engine.round_fn(
-            (node_train,), (node_opt,), (keys,), gbar, (None,), (batches,))
+        trains, opts, _, new_gbar, _, metrics = engine.round_fn(
+            (node_train,), (node_opt,), (keys,), gbar, None, (None,),
+            (batches,))
 
         # every leaf is shipped, so each node row holds the precision-
         # weighted average — the server state is row 0

@@ -9,3 +9,8 @@ assert "xla_force_host_platform_device_count" not in \
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running tests (multi-device subprocess)")

@@ -1,0 +1,187 @@
+"""Fused multi-round blocks: ``run_block(M)`` (lax.scan over rounds, one
+donated dispatch) must reproduce M per-round engine dispatches exactly;
+``block_size=1`` stays the legacy path; block-boundary checkpoints resume
+bit-identically; the server-FedOpt knob is a no-op when off."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.federation import Federation, FederationConfig
+
+TINY = get_config("fedmm-small").with_(
+    n_layers=1, d_model=32, n_heads=2, n_kv_heads=1, head_dim=16,
+    d_ff=64, vocab_size=128, dtype="float32")
+
+BASE = dict(n_nodes=4, local_steps=2, local_batch=8,
+            modalities=("genetics", "tabular"), bridge_modality="tabular",
+            anchors_per_class=2, n_tokens=4, lora_rank=4)
+
+# the paper's heterogeneous-width regime: 4 modalities (192..2048-wide
+# tokenizers) over K=8 nodes -> W=3 width buckets (the bridge node joins
+# the text bucket)
+MIXED_K8 = dict(n_nodes=8, local_steps=2, local_batch=4,
+                modalities=("image", "text", "genetics", "tabular"),
+                bridge_modality="text", anchors_per_class=2, n_tokens=4,
+                lora_rank=4)
+
+
+def _assert_histories_equal(ha, hb, tol=1e-6, w_tol=None):
+    """Losses / accuracy / cross-node CKA at ``tol``; the LAP precision
+    weights optionally at ``w_tol``: they are normalised inverse variances,
+    so the f32 reduction reassociation XLA applies when the round body is
+    compiled inside lax.scan (vs as a standalone program) is amplified
+    decades past the raw metric noise (observed up to ~1e-5, varying run
+    to run with compile order).  Identical programs are bit-identical
+    within a process — the gap is codegen, not logic — so the weights get
+    the suite-standard engine-equivalence tolerance (cf. test_engine)."""
+    assert len(ha) == len(hb)
+    for a, b in zip(ha, hb):
+        for k in ("task_loss", "geo_loss", "acc", "cross_node_cka"):
+            np.testing.assert_allclose(a[k], b[k], rtol=tol, atol=tol,
+                                       err_msg=k)
+        np.testing.assert_allclose(a["weights"], b["weights"],
+                                   atol=w_tol or tol)
+
+
+def test_run_block_matches_sequential_rounds_mixed_width_k8():
+    """Oracle equivalence (the ISSUE acceptance bar): a fused M-round block
+    on the mixed-width bucketed K=8 federation — corrupt + bridge +
+    synthetic-anchor nodes included — must match M sequential ``run_round``
+    dispatches to <= 1e-6."""
+    fed = FederationConfig(method="geodora", aggregation="precision",
+                           rounds=2, bridge_nodes=(0,), corrupt_nodes=(2,),
+                           synthetic_anchor_nodes=(3,), **MIXED_K8)
+    h_seq = Federation(fed, TINY).run()                # M=2 run_round calls
+    h_blk = Federation(fed, TINY).run(block_size=2)    # ONE fused dispatch
+    _assert_histories_equal(h_seq, h_blk, tol=1e-6, w_tol=1e-4)
+
+
+def test_block_size_one_is_exact_legacy_path():
+    """block_size=1 must never touch the block executor — it is the same
+    per-round ``round_fn`` code path as before this feature existed."""
+    fed = FederationConfig(method="geolora", rounds=2, **BASE)
+    f = Federation(fed, TINY)
+
+    def boom(*a, **kw):
+        raise AssertionError("block executor used for block_size=1")
+
+    f.engine.block_fn = boom
+    recs = f.run_rounds(2, block_size=1)
+    assert len(recs) == 2 and len(f.history) == 2
+    assert all(np.isfinite(r["task_loss"]) for r in recs)
+
+
+def test_block_remainder_and_history():
+    """n not divisible by block_size: a final smaller block covers the
+    remainder and history records stay per-round."""
+    fed = FederationConfig(method="geolora", rounds=3, **BASE)
+    f = Federation(fed, TINY)
+    recs = f.run_rounds(3, block_size=2)               # blocks of 2 + 1
+    assert len(recs) == 3 and len(f.history) == 3
+    h_ref = Federation(fed, TINY).run_rounds(3, block_size=1)
+    _assert_histories_equal(h_ref, recs)
+
+
+def test_block_tap_streams_per_round_metrics():
+    """The io_callback tap fires once per ROUND (not per block) with that
+    round's metrics, in order, without the driver syncing between blocks."""
+    fed = FederationConfig(method="geolora", rounds=4, **BASE)
+    f = Federation(fed, TINY)
+    taps = []
+    recs = f.run_rounds(4, block_size=2,
+                        tap=lambda m: taps.append(
+                            float(np.mean(m["scalars"]["task"]))))
+    assert len(taps) == 4
+    np.testing.assert_allclose(taps, [r["task_loss"] for r in recs],
+                               atol=1e-6)
+
+
+def test_checkpoint_at_block_boundary_bit_identical(tmp_path):
+    """A checkpoint written at a block boundary is the engine's block carry:
+    restoring it and running the next block must be BIT-identical to the
+    uninterrupted blocked run (same compiled function, same inputs)."""
+    import os
+    fed = FederationConfig(method="geolora", aggregation="precision",
+                           rounds=4, bridge_nodes=(0,), **BASE)
+    f1 = Federation(fed, TINY)
+    f1.run_rounds(2, block_size=2)
+    path = os.path.join(tmp_path, "fed_block.npz")
+    f1.save(path)
+    rec_cont = f1.run_rounds(2, block_size=2)
+
+    f2 = Federation(fed, TINY)
+    assert f2.restore(path) == 2
+    rec_resumed = f2.run_rounds(2, block_size=2)
+    for a, b in zip(rec_cont, rec_resumed):
+        assert a["task_loss"] == b["task_loss"]
+        assert a["cross_node_cka"] == b["cross_node_cka"]
+        assert a["weights"] == b["weights"]
+    for x, y in zip(jax.tree.leaves((f1._trains, f1._opts, f1._keys,
+                                     f1.gbar)),
+                    jax.tree.leaves((f2._trains, f2._opts, f2._keys,
+                                     f2.gbar))):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_server_fedopt_off_is_legacy_and_zero_beta_matches():
+    """The FedOpt knob: default (None) carries no server-opt state; an
+    ENABLED knob with beta=0 runs the momentum code path but must reduce to
+    the plain precision-weighted average; beta>0 must actually differ."""
+    fed_off = FederationConfig(method="geolora", rounds=3, **BASE)
+    fed_zero = FederationConfig(method="geolora", rounds=3,
+                                server_momentum=0.0, **BASE)
+    fed_mom = FederationConfig(method="geolora", rounds=3,
+                               server_momentum=0.9, **BASE)
+    f_off = Federation(fed_off, TINY)
+    assert f_off._server_m is None
+    h_off = f_off.run()
+    f_zero = Federation(fed_zero, TINY)
+    assert f_zero._server_m is not None
+    h_zero = f_zero.run()
+    _assert_histories_equal(h_off, h_zero, tol=1e-5)
+    h_mom = Federation(fed_mom, TINY).run()
+    assert all(np.isfinite(r["task_loss"]) for r in h_mom)
+    assert abs(h_mom[-1]["task_loss"] - h_off[-1]["task_loss"]) > 1e-7
+
+
+def test_fedopt_state_checkpoints_and_guards_mismatch(tmp_path):
+    """server_m rides the checkpointed block carry; restoring into a
+    federation with a different server_momentum config fails loudly."""
+    import os
+    fed = FederationConfig(method="geolora", rounds=2,
+                           server_momentum=0.9, **BASE)
+    f1 = Federation(fed, TINY)
+    f1.run_rounds(2, block_size=2)
+    path = os.path.join(tmp_path, "fed_mom.npz")
+    f1.save(path)
+    f2 = Federation(fed, TINY)
+    assert f2.restore(path) == 2
+    for x, y in zip(jax.tree.leaves(f1._server_m),
+                    jax.tree.leaves(f2._server_m)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    f3 = Federation(
+        FederationConfig(method="geolora", rounds=2, **BASE), TINY)
+    with pytest.raises(ValueError, match="server_momentum"):
+        f3.restore(path)
+
+
+def test_grams_of_is_one_vmapped_pallas_call():
+    """The per-node Gram loop is vectorised: the pallas backend must trace
+    to a SINGLE (vmapped) pallas_call over the node axis, not K unrolled
+    calls — and match the reference backend."""
+    from repro.core.engine import EngineConfig, RoundEngine
+    k, ba, dm = 5, 8, 16
+    pooled_a = jax.random.normal(jax.random.PRNGKey(0), (k, ba, dm))
+    pal = RoundEngine(
+        EngineConfig(n_nodes=k, local_steps=1, gram_backend="pallas"),
+        None, lambda *a: None, ({},))
+    ref = RoundEngine(
+        EngineConfig(n_nodes=k, local_steps=1, gram_backend="reference"),
+        None, lambda *a: None, ({},))
+    np.testing.assert_allclose(np.asarray(pal._grams_of(pooled_a)),
+                               np.asarray(ref._grams_of(pooled_a)),
+                               atol=1e-5)
+    jaxpr = str(jax.make_jaxpr(pal._grams_of)(pooled_a))
+    assert jaxpr.count("pallas_call") == 1

@@ -1,0 +1,68 @@
+"""shard_map on a REAL multi-device mesh (ROADMAP open item): 8 host
+devices forced via XLA_FLAGS, the 2-axis ("pod", "data") production mesh
+topology, per-bucket all_gather metric ordering checked against the
+single-device engine.
+
+Runs in a subprocess because the parent pytest process has already
+initialised jax with one device."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import jax
+assert jax.device_count() == 8, f"expected 8 forced devices, got {jax.device_count()}"
+import numpy as np
+from repro.configs import get_config
+from repro.core.federation import Federation, FederationConfig
+from repro.launch.mesh import batch_axes, n_nodes
+
+# the production topology's batch axes: nodes sharded over pod x data
+mesh = jax.make_mesh((2, 4), ("pod", "data"))
+assert batch_axes(mesh) == ("pod", "data") and n_nodes(mesh) == 8
+
+TINY = get_config("fedmm-small").with_(
+    n_layers=1, d_model=32, n_heads=2, n_kv_heads=1, head_dim=16,
+    d_ff=64, vocab_size=128, dtype="float32")
+fed = FederationConfig(
+    n_nodes=16, rounds=2, local_steps=1, local_batch=4, method="geolora",
+    modalities=("genetics", "tabular"), corrupt_nodes=(3,),
+    anchors_per_class=1, n_tokens=2, lora_rank=2)
+
+# two width buckets (768 / 192) of 8 nodes each -> 1 node per mesh slice;
+# metrics are gathered per BUCKET then concatenated, so any shard-major
+# interleave would permute the per-node weights below
+f_mesh = Federation(fed, TINY, mesh=mesh)
+assert len(f_mesh._buckets) == 2 and all(len(b) == 8 for b in f_mesh._buckets)
+h_mesh = f_mesh.run()
+h_ref = Federation(fed, TINY).run()
+for a, b in zip(h_ref, h_mesh):
+    np.testing.assert_allclose(a["weights"], b["weights"], atol=1e-5)
+    for k in ("task_loss", "geo_loss", "acc", "cross_node_cka"):
+        np.testing.assert_allclose(a[k], b[k], atol=1e-5, err_msg=k)
+
+# fused block on the multi-device mesh: scan over the shard_map round body
+h_blk = Federation(fed, TINY, mesh=mesh).run(block_size=2)
+for a, b in zip(h_ref, h_blk):
+    np.testing.assert_allclose(a["weights"], b["weights"], atol=1e-5)
+    np.testing.assert_allclose(a["task_loss"], b["task_loss"], atol=1e-5)
+print("MESH8_OK")
+"""
+
+
+@pytest.mark.slow
+def test_shard_map_on_8_device_pod_data_mesh():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                        + env.get("XLA_FLAGS", ""))
+    env["JAX_PLATFORMS"] = "cpu"
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = (os.path.join(repo, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "MESH8_OK" in proc.stdout
