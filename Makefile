@@ -14,10 +14,12 @@ bench-fed:
 	PYTHONPATH=src python -m benchmarks.federation_round
 
 # tiny-config bench harness smoke (the CI invocation; includes the fused
-# M=2 round-block row and writes BENCH_federation.smoke.json, uploaded as
-# a CI artifact)
+# M=2 round-block and sampled-cohort participation rows and writes
+# BENCH_federation.smoke.json, uploaded as a CI artifact).  check_smoke
+# fails the target if the dispatch structure regresses.
 bench-fed-smoke:
 	PYTHONPATH=src python -m benchmarks.federation_round --smoke
+	PYTHONPATH=src python -m benchmarks.check_smoke BENCH_federation.smoke.json
 
 train-smoke:
 	PYTHONPATH=src python -m repro.launch.train --tiny --rounds 2 \

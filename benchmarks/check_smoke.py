@@ -1,0 +1,78 @@
+"""CI guard over the federation smoke bench: fail if the dispatch
+structure regresses.
+
+The engine's whole value proposition is its dispatch structure — one
+compiled call per round, 1/M per round under fused blocks, unchanged by
+width bucketing and participation sampling.  Wall-clock on a shared CI
+runner is too noisy to gate on, but the dispatch counts are exact
+invariants, so this script asserts them over ``BENCH_federation.smoke.json``
+and exits non-zero on any regression (missing row, extra dispatches, a
+participation row that stopped fusing).
+
+Run (after ``python -m benchmarks.federation_round --smoke``):
+
+    python -m benchmarks.check_smoke BENCH_federation.smoke.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+REQUIRED_ROWS = (
+    "round_latency_k2",
+    "mixed_width_bucketed_k2",
+    "fused_rounds_m2",
+    "sampled_cohort_c1_of_k2",
+    "gram_backend_k2",
+)
+
+
+def check(data: dict) -> list:
+    errors = []
+    rows = {r["name"]: r for r in data.get("rows", ())}
+    for name in REQUIRED_ROWS:
+        if name not in rows:
+            errors.append(f"missing smoke row {name!r}")
+    for r in data.get("rows", ()):
+        name = r["name"]
+        if r.get("engine_dispatches_per_round", 1) != 1:
+            errors.append(
+                f"{name}: engine dispatches/round regressed to "
+                f"{r['engine_dispatches_per_round']} (expected 1)")
+        m = r.get("block_rounds")
+        if m:
+            want = round(1.0 / m, 4)
+            # dispatches_per_round is MEASURED (a counter on the compiled
+            # block fn during the timed reps), so a driver that stops
+            # fusing — or a participation path that adds per-round
+            # dispatches — actually trips this
+            for field in ("dispatches_per_round", "host_syncs_per_round"):
+                if field in r and r[field] != want:
+                    errors.append(f"{name}: {field}={r[field]} regressed "
+                                  f"(expected {want} for M={m} blocks)")
+            if r.get("per_round_dispatches_per_round", 1) != 1:
+                errors.append(
+                    f"{name}: per-round engine dispatches/round regressed "
+                    f"to {r['per_round_dispatches_per_round']} "
+                    f"(expected 1)")
+        if "cost_vs_full" in r and r["cost_vs_full"] <= 0:
+            errors.append(f"{name}: nonsensical cost_vs_full "
+                          f"{r['cost_vs_full']}")
+    return errors
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_federation.smoke.json"
+    with open(path) as fh:
+        data = json.load(fh)
+    errors = check(data)
+    for e in errors:
+        print(f"SMOKE BENCH REGRESSION: {e}", file=sys.stderr)
+    if not errors:
+        print(f"{path}: dispatch structure OK "
+              f"({len(data.get('rows', ()))} rows)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,8 +21,12 @@ so peak round-state memory stays ~1x instead of 2x.
 ``fused_rounds_m{M}`` rows measure the block executor (``run_block``:
 lax.scan over M whole rounds, donated carry) against the per-round engine:
 ms/round, dispatches and blocking host syncs per round (both 1/M fused),
-and the compiled block's peak bytes.  The ``gram_backend`` row compares the
-reference jnp Gram against the Pallas kernel (interpret mode on CPU — the
+and the compiled block's peak bytes.  ``sampled_cohort_*`` / ``dropout_*``
+rows measure partial participation through the fused blocks: a uniform
+C-of-K cohort must cost ~C/K of the full round (the gather-compact path)
+and a dropout straggler mask ~1x (masked path), both still at 1/M
+dispatches per round.  The ``gram_backend`` row compares the reference jnp
+Gram against the Pallas kernel (interpret mode on CPU — the
 dispatch-correctness datapoint; the performance target is TPU) on the
 server step.
 
@@ -53,6 +57,16 @@ def _fedcfg(k: int, modalities) -> FederationConfig:
                             modalities=modalities)
 
 
+def _light_fedcfg(k: int, modalities) -> FederationConfig:
+    """The high-round-rate regime (small batches, tiny anchor set) shared
+    by the fused-rounds and participation rows, so their ms/round numbers
+    stay comparable in BENCH_federation.json."""
+    return FederationConfig(n_nodes=k, rounds=1, local_steps=LOCAL_STEPS,
+                            local_batch=4, method="geolora", lora_rank=2,
+                            anchors_per_class=1, n_tokens=2,
+                            modalities=modalities)
+
+
 def _time_rounds(f, rounds: int) -> float:
     """Best-of-N ms/round (min is the robust latency estimator under CPU
     contention; the first round is warmup and pays compilation)."""
@@ -76,6 +90,26 @@ def _peak_bytes(f: Federation, block_m: int = None) -> int:
     return int(ma.argument_size_in_bytes + ma.output_size_in_bytes
                + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
 
+
+
+def _count_calls(holder, key=None, attr=None):
+    """Wrap a compiled engine function with a dispatch counter so the
+    bench MEASURES the dispatch structure it reports (and CI guards)
+    instead of asserting a constant.  ``holder`` is either the engine's
+    ``_block_cache`` dict (pass ``key``) or the engine itself (pass
+    ``attr`` for the per-round ``round_fn``)."""
+    calls = {"n": 0}
+    orig = holder[key] if attr is None else getattr(holder, attr)
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return orig(*args, **kwargs)
+
+    if attr is None:
+        holder[key] = counting
+    else:
+        setattr(holder, attr, counting)
+    return calls
 
 
 def bench_cfg(name: str, k: int, modalities, rounds: int) -> dict:
@@ -154,10 +188,7 @@ def bench_fused_rounds(name: str, k: int, modalities, reps: int,
     targets, where the host round-trip is a visible slice of the round)
     and INTERLEAVES the two timings rep by rep so slow machine-load drift
     cancels instead of biasing whichever variant ran later."""
-    fedcfg = FederationConfig(
-        n_nodes=k, rounds=1, local_steps=LOCAL_STEPS, local_batch=4,
-        method="geolora", lora_rank=2, anchors_per_class=1, n_tokens=2,
-        modalities=modalities)
+    fedcfg = _light_fedcfg(k, modalities)
     per_round = Federation(fedcfg, TINY)
     fused = Federation(fedcfg, TINY)
     per_round_peak = _peak_bytes(per_round)
@@ -165,6 +196,10 @@ def bench_fused_rounds(name: str, k: int, modalities, reps: int,
     for _ in range(m):                     # warmup + compile both variants
         per_round.run_round()
     fused.run_rounds(m, block_size=m)
+    # dispatch counters wrap the already-compiled functions AFTER warmup,
+    # so the timed reps below measure the real dispatch structure
+    pr_calls = _count_calls(per_round.engine, attr="round_fn")
+    fu_calls = _count_calls(fused.engine._block_cache, key=(m, False, None))
     best_r = best_f = float("inf")
     # small M means short timed spans; take more reps so a transient
     # contention burst cannot bias a whole variant
@@ -179,6 +214,7 @@ def bench_fused_rounds(name: str, k: int, modalities, reps: int,
         best_f = min(best_f, time.perf_counter() - t0)
     per_round_ms = best_r / m * 1e3
     fused_ms = best_f / m * 1e3
+    timed_rounds = reps * m
 
     row = {
         "name": name,
@@ -189,12 +225,15 @@ def bench_fused_rounds(name: str, k: int, modalities, reps: int,
         "per_round_engine_ms_per_round": round(per_round_ms, 2),
         "fused_ms_per_round": round(fused_ms, 2),
         "fused_speedup": round(per_round_ms / fused_ms, 2),
-        # dispatch / sync structure: the per-round driver issues one jitted
-        # call and blocks once (metric readback) per round; the block
-        # executor amortises both over M rounds
-        "dispatches_per_round": round(1.0 / m, 4),
+        # dispatch structure, MEASURED over the timed reps (counters on
+        # the compiled functions): the per-round driver issues one jitted
+        # call per round; the block executor amortises it over M rounds.
+        # Host syncs mirror the dispatch structure by construction (one
+        # blocking metric readback per dispatch in both drivers).
+        "dispatches_per_round": round(fu_calls["n"] / timed_rounds, 4),
         "host_syncs_per_round": round(1.0 / m, 4),
-        "per_round_dispatches_per_round": 1,
+        "per_round_dispatches_per_round": round(
+            pr_calls["n"] / timed_rounds, 4),
         "per_round_host_syncs_per_round": 1,
         "peak_bytes_per_round_engine": per_round_peak,
         "peak_bytes_fused_block": fused_peak,
@@ -204,6 +243,67 @@ def bench_fused_rounds(name: str, k: int, modalities, reps: int,
           f"(x{row['fused_speedup']}, dispatches/round 1 -> 1/{m}) "
           f"peak {fused_peak/1e6:.1f}MB vs {per_round_peak/1e6:.1f}MB",
           flush=True)
+    return row
+
+
+def bench_participation(name: str, k: int, modalities, reps: int, m: int,
+                        plan) -> dict:
+    """Partial participation through the fused-block executor: full
+    participation vs a sampled cohort (gather-compact: local-epoch compute
+    scales with the cohort size C, not K) or a dropout straggler mask
+    (masked path: full compute, masked updates), all at 1/M dispatches and
+    host syncs per round.  Interleaved best-of timing, same protocol as
+    the fused-rounds bench."""
+    fedcfg = _light_fedcfg(k, modalities)
+    full = Federation(fedcfg, TINY)
+    samp = Federation(fedcfg, TINY)
+    full.run_rounds(m, block_size=m)                   # warmup + compile
+    recs = samp.run_rounds(m, block_size=m, participation=plan)
+    # measure the dispatch structure (counter on the compiled block fn,
+    # installed after warmup): participation must not add dispatches
+    samp_calls = _count_calls(samp.engine._block_cache,
+                              key=(m, False, plan))
+    best_full = best_samp = float("inf")
+    reps = max(reps, 32 // m)
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        full.run_rounds(m, block_size=m)
+        best_full = min(best_full, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        recs = samp.run_rounds(m, block_size=m, participation=plan)
+        best_samp = min(best_samp, time.perf_counter() - t0)
+    full_ms = best_full / m * 1e3
+    samp_ms = best_samp / m * 1e3
+    timed_rounds = reps * m
+    mean_cohort = sum(r["cohort_size"] for r in recs) / len(recs)
+
+    row = {
+        "name": name,
+        "k_nodes": k,
+        "modalities": list(modalities),
+        "local_steps": LOCAL_STEPS,
+        "block_rounds": m,
+        "strategy": plan.strategy,
+        "cohort_size": plan.cohort_size,
+        "dropout_rate": (plan.dropout_rate if plan.strategy == "dropout"
+                         else None),
+        "mean_cohort": round(mean_cohort, 2),
+        "full_ms_per_round": round(full_ms, 2),
+        "sampled_ms_per_round": round(samp_ms, 2),
+        # < 1 when compute tracks the cohort (gather-compact strategies);
+        # ~1 for the masked dropout path (compute stays at K by design)
+        "cost_vs_full": round(samp_ms / full_ms, 2),
+        "cohort_fraction": round(mean_cohort / k, 2),
+        # participation must not change the dispatch structure: still one
+        # donated dispatch per M-round block — MEASURED over the timed
+        # reps (host syncs mirror dispatches: one readback per block)
+        "dispatches_per_round": round(samp_calls["n"] / timed_rounds, 4),
+        "host_syncs_per_round": round(1.0 / m, 4),
+    }
+    print(f"{name} K={k} M={m} {plan.strategy}: full={full_ms:.1f}ms "
+          f"sampled={samp_ms:.1f}ms/round (cost x{row['cost_vs_full']} at "
+          f"cohort {mean_cohort:.1f}/{k}, measured dispatches/round "
+          f"{row['dispatches_per_round']})", flush=True)
     return row
 
 
@@ -241,6 +341,7 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     out = args.out or ("BENCH_federation.smoke.json" if args.smoke
                        else "BENCH_federation.json")
+    from repro.core.participation import ParticipationPlan
     if args.smoke:
         ks, rounds = (2,), 1
         sweep_modalities = ("genetics", "tabular")
@@ -249,6 +350,10 @@ def main() -> None:
         fused_ms = (2,)                    # CI smoke: M=2 fused block
         fused_modalities = ("genetics", "tabular")
         gram_k = 2
+        # one modality -> one width bucket, so the C=1 cohort satisfies
+        # the >= 1-slot-per-bucket allocation
+        part_rows = [("sampled_cohort_c1_of_k2", 2, ("tabular",), 2,
+                      ParticipationPlan(strategy="uniform", cohort_size=1))]
     else:
         ks = (4, 8) if args.quick else (4, 8, 16)
         rounds = 2 if args.quick else 3
@@ -262,6 +367,14 @@ def main() -> None:
         # amortises
         fused_modalities = ("genetics", "tabular")
         gram_k = 8
+        # participation rows ride the M=4 fused block: per-round cost must
+        # track the cohort size while dispatches stay at 1/M per round
+        part_rows = [
+            ("sampled_cohort_c4_of_k8", 8, fused_modalities, 4,
+             ParticipationPlan(strategy="uniform", cohort_size=4)),
+            ("dropout_p25", 8, fused_modalities, 4,
+             ParticipationPlan(strategy="dropout", dropout_rate=0.25)),
+        ]
     rows = [bench_cfg(f"round_latency_k{k}", k, sweep_modalities, rounds)
             for k in ks]
     rows.append(bench_mixed_bucketed(
@@ -269,6 +382,8 @@ def main() -> None:
     rows += [bench_fused_rounds(f"fused_rounds_m{m}", mixed_k,
                                 fused_modalities, rounds, m)
              for m in fused_ms]
+    rows += [bench_participation(name, k, mods, rounds, m, plan)
+             for name, k, mods, m, plan in part_rows]
     rows.append(bench_gram_backend(f"gram_backend_k{gram_k}", gram_k,
                                    sweep_modalities, rounds))
     results = {

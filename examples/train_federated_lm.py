@@ -6,6 +6,32 @@ accelerator), or --arch to pick any assigned architecture (reduced).
 
     PYTHONPATH=src python examples/train_federated_lm.py
     PYTHONPATH=src python examples/train_federated_lm.py --full
+
+Partial participation
+---------------------
+Real cross-silo rounds rarely field every node.  The engine samples a
+reporting cohort per round ON DEVICE (the sampler state rides the fused
+round blocks and checkpoints), non-reporters carry their state through
+untouched, and the server averages Grams/precisions/side-cars over exactly
+the cohort:
+
+    # 2-of-K uniformly sampled cohort per round (compute tracks the
+    # cohort size, not K — the cohort rows are gathered compactly)
+    PYTHONPATH=src python examples/train_federated_lm.py \
+        --participation uniform --cohort-size 2
+
+    # straggler simulation: each node drops out with p=0.25 per round
+    PYTHONPATH=src python examples/train_federated_lm.py \
+        --participation dropout --dropout-rate 0.25
+
+    # poll unreliable (low LAP-precision) nodes less often
+    PYTHONPATH=src python examples/train_federated_lm.py \
+        --participation precision --cohort-size 2
+
+``--participation full`` (default) is bit-identical to the
+pre-participation driver.  Everything composes with ``--block-size M``
+(or ``--block-size auto``) fused round blocks and ``--warmup-rounds N``
+round-indexed LR schedules.
 """
 import argparse
 import sys
@@ -18,15 +44,25 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="~100M params, 25 rounds x 8 local steps")
     ap.add_argument("--arch", default="fedmm-small")
-    args = ap.parse_args()
+    ap.add_argument("--participation", default="full",
+                    choices=["full", "uniform", "precision", "dropout"])
+    ap.add_argument("--cohort-size", type=int, default=None)
+    ap.add_argument("--dropout-rate", type=float, default=0.25)
+    # anything else (--block-size, --warmup-rounds, ...) passes through to
+    # the underlying repro.launch.train driver
+    args, extra = ap.parse_known_args()
+    part = ["--participation", args.participation,
+            "--dropout-rate", str(args.dropout_rate)] + extra
+    if args.cohort_size is not None:
+        part += ["--cohort-size", str(args.cohort_size)]
     if args.full:
         train_main(["--arch", args.arch, "--rounds", "25",
                     "--local-steps", "8", "--batch", "8", "--seq", "512",
-                    "--method", "geodora"])
+                    "--method", "geodora"] + part)
     else:
         train_main(["--arch", args.arch, "--tiny", "--rounds", "3",
                     "--local-steps", "4", "--batch", "4", "--seq", "128",
-                    "--method", "geodora"])
+                    "--method", "geodora"] + part)
 
 
 if __name__ == "__main__":

@@ -101,7 +101,7 @@ def broadcast_into_buckets(bucket_trees, shipped_masks, total):
 
 
 def weighted_average_bucketed(bucket_trees, weights: Array, shipped_masks,
-                              bucket_sizes):
+                              bucket_sizes, part_mask: Array = None):
     """Server step across width BUCKETS: ``bucket_trees[b]`` stacks the
     bucket's nodes along a leading axis; ``weights`` is (K,) in
     bucket-concatenated row order.  Shipped leaves (identical shapes in
@@ -110,7 +110,17 @@ def weighted_average_bucketed(bucket_trees, weights: Array, shipped_masks,
     node-local leaves (the W_mk adapters, whose widths differ per bucket)
     pass through untouched.  The sharded engine path reuses the two halves
     (``bucketed_partial_sums`` / ``broadcast_into_buckets``) with a psum
-    between them."""
+    between them.
+
+    ``part_mask`` (K,) 0/1 enables mask-aware normalisation for partial
+    participation: non-reporting rows are zeroed out of the average and
+    the weights are renormalised over the reporting cohort, so the
+    broadcast value is the average of exactly the nodes that reported
+    (Eq. 4/5 over the cohort).  ``None`` keeps the legacy behaviour
+    bit-identically (weights used as given, assumed normalised)."""
+    if part_mask is not None:
+        w = weights.astype(jnp.float32) * part_mask.astype(jnp.float32)
+        weights = w / jnp.maximum(w.sum(), 1e-12)
     return broadcast_into_buckets(
         bucket_trees, shipped_masks,
         bucketed_partial_sums(bucket_trees, weights, shipped_masks,

@@ -59,10 +59,16 @@ def geo_alignment_loss(pooled_anchors: Array, consensus_gram: Array, *,
                      center=center)
 
 
-def consensus_gram(node_grams: Array) -> Array:
+def consensus_gram(node_grams: Array, mask: Array = None) -> Array:
     """Server side: G_bar = mean_k G^(k). node_grams: (K, B, B) (the server
-    may only ever see these Gram matrices, not activations)."""
-    return node_grams.mean(axis=0)
+    may only ever see these Gram matrices, not activations).  With a
+    participation ``mask`` (K,) the mean runs over REPORTING nodes only —
+    Eq. 2 averaged over whichever nodes upload this round."""
+    if mask is None:
+        return node_grams.mean(axis=0)
+    m = mask.astype(jnp.float32)
+    num = (m[:, None, None] * node_grams.astype(jnp.float32)).sum(axis=0)
+    return num / jnp.maximum(m.sum(), 1.0)
 
 
 def pairwise_cka(grams: Array, *, center: bool = False) -> Array:
@@ -74,9 +80,16 @@ def pairwise_cka(grams: Array, *, center: bool = False) -> Array:
     return fn(grams, grams)
 
 
-def mean_offdiag_cka(grams: Array, *, center: bool = False) -> Array:
+def mean_offdiag_cka(grams: Array, *, center: bool = False,
+                     mask: Array = None) -> Array:
     """Mean off-diagonal pairwise CKA over K node Grams — the per-round
-    cross-modality alignment metric reported by the federation drivers."""
+    cross-modality alignment metric reported by the federation drivers.
+    With a participation ``mask`` (K,), only pairs of REPORTING nodes
+    count (0.0 when fewer than two report)."""
     k = grams.shape[0]
     pair = pairwise_cka(grams, center=center)
-    return (pair.sum() - jnp.trace(pair)) / max(k * (k - 1), 1)
+    if mask is None:
+        return (pair.sum() - jnp.trace(pair)) / max(k * (k - 1), 1)
+    m = mask.astype(jnp.float32)
+    w = m[:, None] * m[None, :] * (1.0 - jnp.eye(k, dtype=jnp.float32))
+    return (pair * w).sum() / jnp.maximum(w.sum(), 1.0)

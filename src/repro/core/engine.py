@@ -40,7 +40,20 @@ of K x E separate jit dispatches:
     or drawn on-device from the carried RNG streams (``batches=None``);
     per-round metrics accumulate into (M, ...) device buffers returned at
     block end, with an optional ``io_callback`` tap that streams each
-    round's metrics to a host logger without forcing a sync.
+    round's metrics to a host logger without forcing a sync (ordered on a
+    single host; unordered per-host on a mesh, each payload carrying its
+    round index, so pods are never serialised by the log stream);
+  - a ``ParticipationPlan`` (``repro.core.participation``) threads sampled
+    cohorts and straggler masks through all of the above: the cohort is
+    drawn ON DEVICE from a carried sampler state (part of the donated
+    round/block carry, so it composes with the fused scan and
+    checkpoints), static-cohort strategies GATHER the cohort rows into
+    compact per-bucket states so local-epoch compute scales with the
+    cohort size C instead of K, the dropout/straggler path masks state
+    updates so non-reporters carry through untouched, and the server step
+    (consensus Gram, LAP precisions, side-car average, FedAvgM) runs over
+    exactly the reporting cohort.  ``participation=full`` never touches
+    any of this — it routes to the unchanged legacy program.
 
 The engine is workload-agnostic: ``local_step`` owns the loss (multimodal
 classification in ``core.federation``, LM fine-tuning in ``launch.train``,
@@ -59,9 +72,25 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import aggregation as agg
 from repro.core import cka as cka_mod
+from repro.core import participation as part_mod
 from repro.core import uncertainty as unc
 
 Array = jax.Array
+
+
+def auto_block_size(dispatch_s: float, round_s: float, *,
+                    target: float = 0.05, cap: int = 64) -> int:
+    """Pick the fused-block size M from measured host dispatch overhead:
+    the per-round host work under M-round blocks is ~``dispatch_s / M``,
+    so the smallest M with ``dispatch_s / M < target * round_s`` keeps
+    host work under ``target`` (default 5%) of round time.  Clamped to
+    [1, cap]; degenerate measurements (zero/negative round time) take the
+    cap.  Drivers measure once at startup (``--block-size auto``)."""
+    if round_s <= 0 or dispatch_s <= 0:
+        return cap if round_s <= 0 else 1
+    import math
+    m = math.ceil(dispatch_s / (target * round_s))
+    return max(1, min(int(m), cap))
 
 # local_step(train, opt_state, key, gbar, statics, batch)
 #   -> (train, opt_state, key, aux)
@@ -116,6 +145,18 @@ def stack_nodes(trees) -> Any:
     """Stack structurally identical per-node pytrees along a new leading
     node axis (``None`` placeholder leaves pass through)."""
     return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def masked_select(mask: Array, new_tree, old_tree):
+    """Per-row state selection under a participation mask: rows with
+    ``mask > 0`` take the advanced value, other rows carry the old one
+    through untouched.  Works on whole pytrees (or bare arrays) whose
+    leaves lead with the node-row axis — what makes a straggler's round a
+    no-op on every piece of its state."""
+    def sel(new, old):
+        m = mask.reshape((mask.shape[0],) + (1,) * (new.ndim - 1)) > 0
+        return jnp.where(m, new, old)
+    return jax.tree.map(sel, new_tree, old_tree)
 
 
 def _as_buckets(x) -> tuple:
@@ -179,8 +220,18 @@ class RoundEngine:
         if self._gram_backend == "auto":
             self._gram_backend = ("pallas" if jax.default_backend() == "tpu"
                                   else "reference")
+        # canonical node ids per bucket (row order) and the row offset of
+        # each bucket — the participation sampler's group layout
+        groups, offs, off = [], [], 0
+        for kb in self.bucket_sizes:
+            groups.append(tuple(perm[off:off + kb]))
+            offs.append(off)
+            off += kb
+        self._groups = tuple(groups)
+        self._bucket_offsets = tuple(offs)
         donate = (0, 1, 2, 3, 4) if ecfg.donate else ()
         self._block_cache = {}
+        self._part_cache = {}
         self._tap_holders = {}
         if mesh is None:
             # jit=False leaves round_fn as the plain round body, for callers
@@ -266,7 +317,12 @@ class RoundEngine:
         """scan over E local steps of the vmapped per-node step; returns the
         advanced state plus the LAST step's aux (pooled / pooled_a /
         scalars) — what the server consumes, mirroring the sequential
-        reference."""
+        reference.  When the optimizer carries a global-round counter
+        (``AdamW.round_schedule``), it is bumped here — once per round,
+        only for the nodes whose epochs actually run, so participation
+        masking/compaction skips non-reporting nodes' counters too."""
+        if isinstance(opt_state, dict) and "round" in opt_state:
+            opt_state = dict(opt_state, round=opt_state["round"] + 1)
         batch_axis = None if batches is None else 0
 
         def body(carry, xs):
@@ -327,6 +383,158 @@ class RoundEngine:
         }
         return (tuple(trains), tuple(opts), tuple(keys), new_gbar, server_m,
                 metrics)
+
+    # ------------------------------------------------------------------
+    # participation-aware round body (sampled cohorts / straggler masks).
+    # Kept SEPARATE from ``_round`` so the full-participation path stays
+    # byte-for-byte the pre-participation program (``participation=full``
+    # is routed to ``round_fn`` and never traces this).
+    def _round_part(self, plan, trains, opts, keys, gbar, server_m,
+                    part_state, statics, batches):
+        """One round under a ``ParticipationPlan``: the sampler draws this
+        round's cohort from the carried ``part_state``, local epochs run
+        only for (gather-compact) or are only KEPT for (masked) the
+        reporting rows, and the whole server step — consensus Gram, LAP
+        precisions, side-car average, FedAvgM — runs over the cohort.
+        Non-reporting rows carry every piece of state (trainables, opt
+        moments, RNG keys, round counters) through untouched, then receive
+        the server broadcast like every other row."""
+        k = self.ecfg.n_nodes
+        prev = None if server_m is None else self._server_prev(trains)
+        row_masks, cohort_rows, part_state = part_mod.sample_rows(
+            plan, part_state, self._groups)
+        compact = (plan.compact and part_mod.static_cohort(plan)
+                   and cohort_rows is not None)
+        trains, opts, keys = list(trains), list(opts), list(keys)
+        offs = self._bucket_offsets
+
+        if compact:
+            # gather the cohort rows into compact (c_b, ...) states: local
+            # epochs cost compute proportional to the cohort size C, not K
+            comp_trains, comp_sizes, comp_masks = [], [], []
+            lasts, rows_global = [], []
+            for b in range(self.n_buckets):
+                idx = cohort_rows[b]
+                if int(idx.shape[0]) == 0:     # statically empty bucket
+                    continue
+                gat = lambda x: jnp.take(x, idx, axis=0)
+                tr_c = jax.tree.map(gat, trains[b])
+                op_c = jax.tree.map(gat, opts[b])
+                ke_c = jnp.take(keys[b], idx, axis=0)
+                st_c = (None if statics[b] is None
+                        else jax.tree.map(gat, statics[b]))
+                bt_c = (None if batches[b] is None
+                        else jax.tree.map(
+                            lambda x: jnp.take(x, idx, axis=1), batches[b]))
+                tr_c, op_c, ke_c, last = self._local_epochs(
+                    tr_c, op_c, ke_c, gbar, st_c, bt_c)
+                # scatter the advanced cohort back; other rows untouched
+                trains[b] = jax.tree.map(
+                    lambda f, p: f.at[idx].set(p), trains[b], tr_c)
+                opts[b] = jax.tree.map(
+                    lambda f, p: f.at[idx].set(p), opts[b], op_c)
+                keys[b] = keys[b].at[idx].set(ke_c)
+                comp_trains.append(tr_c)
+                comp_sizes.append(int(idx.shape[0]))
+                comp_masks.append(self.shipped_masks[b])
+                lasts.append(last)
+                rows_global.append(offs[b] + idx)
+            pooled = jnp.concatenate([l.pop("pooled") for l in lasts])
+            pooled_a = jnp.concatenate([l.pop("pooled_a") for l in lasts])
+            rows_cat = jnp.concatenate(rows_global)          # (C,) row ids
+            c = int(rows_cat.shape[0])
+            mask_rows = jnp.concatenate(row_masks)
+
+            # ---- server over the cohort (same program) ----
+            grams = self._grams_of(pooled_a)
+            new_gbar = cka_mod.consensus_gram(grams)         # C rows only
+            p_c = None
+            if (self.ecfg.aggregation == "precision"
+                    or plan.strategy == "precision"):
+                p_c = unc.batched_precisions(pooled, pooled_a)
+            if self.ecfg.aggregation == "precision":
+                w_c = unc.precision_weights(p_c)
+            else:
+                w_c = jnp.full((c,), 1.0 / c, jnp.float32)
+            total = agg.bucketed_partial_sums(
+                tuple(comp_trains), w_c, tuple(comp_masks),
+                tuple(comp_sizes))
+            if server_m is not None:
+                server_m, total = self._apply_server_momentum(
+                    prev, total, server_m)
+            trains = list(agg.broadcast_into_buckets(
+                tuple(trains), self.shipped_masks, total))
+            scatter = lambda v: jnp.zeros((k,), jnp.float32).at[
+                rows_cat].set(v.astype(jnp.float32))
+            scalars = {name: scatter(jnp.concatenate([l[name]
+                                                      for l in lasts]))
+                       for name in lasts[0]}
+            weights_rows = scatter(w_c)
+            xcka = cka_mod.mean_offdiag_cka(grams,
+                                            center=self.ecfg.center_cka)
+            if p_c is not None:
+                part_state = part_mod.update_state(
+                    plan, part_state, mask_rows, scatter(p_c))
+        else:
+            # masked path (dropout / opted-out compaction): every row
+            # computes, only reporting rows' state advances — the update
+            # selection is what makes a straggler's round a no-op
+            lasts = []
+            for b in range(self.n_buckets):
+                tr2, op2, ke2, last = self._local_epochs(
+                    trains[b], opts[b], keys[b], gbar, statics[b],
+                    batches[b])
+                mb = row_masks[b]
+                trains[b] = masked_select(mb, tr2, trains[b])
+                opts[b] = masked_select(mb, op2, opts[b])
+                keys[b] = masked_select(mb, ke2, keys[b])
+                lasts.append(last)
+            pooled = jnp.concatenate([l.pop("pooled") for l in lasts])
+            pooled_a = jnp.concatenate([l.pop("pooled_a") for l in lasts])
+            mask_rows = jnp.concatenate(row_masks)
+
+            grams = self._grams_of(pooled_a)
+            new_gbar = cka_mod.consensus_gram(grams, mask=mask_rows)
+            p_rows = None
+            if (self.ecfg.aggregation == "precision"
+                    or plan.strategy == "precision"):
+                p_rows = unc.batched_precisions(pooled, pooled_a)
+            if self.ecfg.aggregation == "precision":
+                weights_rows = unc.masked_precision_weights(p_rows,
+                                                            mask_rows)
+            else:
+                weights_rows = mask_rows / jnp.maximum(mask_rows.sum(),
+                                                       1.0)
+            if server_m is None:
+                trains = list(agg.weighted_average_bucketed(
+                    tuple(trains), weights_rows, self.shipped_masks,
+                    self.bucket_sizes, part_mask=mask_rows))
+            else:
+                total = agg.bucketed_partial_sums(
+                    tuple(trains), weights_rows, self.shipped_masks,
+                    self.bucket_sizes)
+                server_m, total = self._apply_server_momentum(
+                    prev, total, server_m)
+                trains = list(agg.broadcast_into_buckets(
+                    tuple(trains), self.shipped_masks, total))
+            scalars = {name: jnp.concatenate([l[name] for l in lasts])
+                       * mask_rows for name in lasts[0]}
+            xcka = cka_mod.mean_offdiag_cka(
+                grams, center=self.ecfg.center_cka, mask=mask_rows)
+            if p_rows is not None:
+                part_state = part_mod.update_state(
+                    plan, part_state, mask_rows, p_rows)
+
+        metrics = {
+            "scalars": {name: self._unpermute(v)
+                        for name, v in scalars.items()},
+            "weights": self._unpermute(weights_rows),
+            "cross_node_cka": xcka,
+            "participation": self._unpermute(mask_rows),
+            "cohort_size": mask_rows.sum(),
+        }
+        return (tuple(trains), tuple(opts), tuple(keys), new_gbar,
+                server_m, part_state, metrics)
 
     # ------------------------------------------------------------------
     def _round_sharded(self, trains, opts, keys, gbar, server_m, statics,
@@ -412,9 +620,139 @@ class RoundEngine:
             out_specs=(node_spec, node_spec, node_spec, P(), P(), P()),
         )(trains, opts, keys, gbar, server_m, statics, batches)
 
+    def _round_sharded_part(self, plan, trains, opts, keys, gbar, server_m,
+                            part_state, statics, batches):
+        """Participation on the shard_map path.  The sampler state is
+        REPLICATED, so every shard draws the identical full-federation
+        cohort and slices out its own rows (the shard's linearised index
+        over the mesh batch axes); execution is always the masked path —
+        cross-shard gather-compaction would need a resharding collective
+        that costs more than the masked compute it saves.  The server
+        collectives are the legacy psums with mask-aware normalisation."""
+        ax = self._axes
+        mesh_shape = dict(self.mesh.shape)
+        node_spec = P(ax)
+        batch_specs = tuple(P() if b is None else P(None, ax)
+                            for b in batches)
+
+        def inner(trains, opts, keys, gbar, server_m, part_state, statics,
+                  batches):
+            prev = None if server_m is None else self._server_prev(trains)
+            row_masks, _, part_state = part_mod.sample_rows(
+                plan, part_state, self._groups)
+            mask_full = jnp.concatenate(row_masks)       # replicated (K,)
+            shard = jnp.zeros((), jnp.int32)
+            for a in ax:
+                shard = shard * mesh_shape[a] + jax.lax.axis_index(a)
+            trains, opts, keys = list(trains), list(opts), list(keys)
+            lasts, masks_loc = [], []
+            for b in range(self.n_buckets):
+                kb_loc = keys[b].shape[0]
+                mb = jax.lax.dynamic_slice(row_masks[b],
+                                           (shard * kb_loc,), (kb_loc,))
+                tr2, op2, ke2, last = self._local_epochs(
+                    trains[b], opts[b], keys[b], gbar, statics[b],
+                    batches[b])
+                trains[b] = masked_select(mb, tr2, trains[b])
+                opts[b] = masked_select(mb, op2, opts[b])
+                keys[b] = masked_select(mb, ke2, keys[b])
+                lasts.append(last)
+                masks_loc.append(mb)
+            pooled = jnp.concatenate([l.pop("pooled") for l in lasts])
+            pooled_a = jnp.concatenate([l.pop("pooled_a") for l in lasts])
+            scalars = {name: jnp.concatenate([l[name] for l in lasts])
+                       for name in lasts[0]}
+            m_loc = jnp.concatenate(masks_loc)
+            kb_loc = tuple(ks.shape[0] for ks in keys)
+
+            grams_loc = self._grams_of(pooled_a)
+            g_num = jax.lax.psum(
+                (m_loc[:, None, None] * grams_loc).sum(0), ax)
+            new_gbar = g_num / jnp.maximum(jax.lax.psum(m_loc.sum(), ax),
+                                           1.0)
+            p_loc = None
+            if (self.ecfg.aggregation == "precision"
+                    or plan.strategy == "precision"):
+                p_loc = jnp.maximum(
+                    unc.batched_precisions(pooled, pooled_a), 0.0)
+            if self.ecfg.aggregation == "precision":
+                w_loc = m_loc * p_loc / jnp.maximum(
+                    jax.lax.psum((m_loc * p_loc).sum(), ax), 1e-12)
+            else:
+                w_loc = m_loc / jnp.maximum(
+                    jax.lax.psum(m_loc.sum(), ax), 1.0)
+
+            total = agg.bucketed_partial_sums(
+                tuple(trains), w_loc, self.shipped_masks, kb_loc)
+            total = jax.tree.map(
+                lambda a_: None if a_ is None else jax.lax.psum(a_, ax),
+                total, is_leaf=lambda x: x is None)
+            if server_m is not None:
+                server_m, total = self._apply_server_momentum(
+                    prev, total, server_m)
+            trains = list(agg.broadcast_into_buckets(
+                tuple(trains), self.shipped_masks, total))
+
+            gather = functools.partial(jax.lax.all_gather, axis_name=ax,
+                                       axis=0, tiled=True)
+
+            def gather_cat(v_loc):
+                off, parts = 0, []
+                for kb in kb_loc:
+                    parts.append(gather(v_loc[off:off + kb]))
+                    off += kb
+                return jnp.concatenate(parts)
+
+            # per-bucket gather keeps grams aligned with the bucket-major
+            # replicated mask (a plain shard-major gather would mispair)
+            grams_all = gather_cat(grams_loc)
+            if p_loc is not None:
+                part_state = part_mod.update_state(
+                    plan, part_state, mask_full, gather_cat(p_loc))
+            metrics = {
+                "scalars": {name: self._unpermute(gather_cat(v) * mask_full)
+                            for name, v in scalars.items()},
+                "weights": self._unpermute(gather_cat(w_loc)),
+                "cross_node_cka": cka_mod.mean_offdiag_cka(
+                    grams_all, center=self.ecfg.center_cka,
+                    mask=mask_full),
+                "participation": self._unpermute(mask_full),
+                "cohort_size": mask_full.sum(),
+            }
+            return (tuple(trains), tuple(opts), tuple(keys), new_gbar,
+                    server_m, part_state, metrics)
+
+        return _shard_map(
+            inner, mesh=self.mesh,
+            in_specs=(node_spec, node_spec, node_spec, P(), P(), P(),
+                      node_spec, batch_specs),
+            out_specs=(node_spec, node_spec, node_spec, P(), P(), P(),
+                       P()),
+        )(trains, opts, keys, gbar, server_m, part_state, statics, batches)
+
+    # ------------------------------------------------------------------
+    def part_round_fn(self, plan):
+        """Compiled participation-aware round for ``plan`` (cached per
+        plan; plans are frozen/hashable).  Signature adds the sampler
+        state: ``(trains, opts, keys, gbar, server_m, part_state, statics,
+        batches) -> (..., part_state, metrics)``; the round-state buffers
+        INCLUDING the sampler state are donated."""
+        plan = part_mod.normalize(plan)
+        if plan is None:
+            raise ValueError("full participation is the legacy round_fn")
+        fn = self._part_cache.get(plan)
+        if fn is not None:
+            return fn
+        body = (self._round_part if self.mesh is None
+                else self._round_sharded_part)
+        donate = (0, 1, 2, 3, 4, 5) if self.ecfg.donate else ()
+        fn = jax.jit(functools.partial(body, plan), donate_argnums=donate)
+        self._part_cache[plan] = fn
+        return fn
+
     # ------------------------------------------------------------------
     # fused multi-round blocks: lax.scan over M whole rounds, one dispatch
-    def block_fn(self, m: int, *, tap=None):
+    def block_fn(self, m: int, *, tap=None, plan=None):
         """Compiled M-round block: ``jax.lax.scan`` over the round body with
         the (trains, opts, keys, gbar, server_m) carry DONATED, so M rounds
         cost one dispatch and zero intermediate host syncs.  ``tap`` is an
@@ -429,54 +767,101 @@ class RoundEngine:
         is ~independent of M."""
         if m < 1:
             raise ValueError(f"block size must be >= 1, got {m}")
-        cache_key = (m, tap is not None)
+        plan = part_mod.normalize(plan)
+        cache_key = (m, tap is not None, plan)
         if tap is not None:
             self._tap_holders.setdefault(cache_key, [None])[0] = tap
         fn = self._block_cache.get(cache_key)
         if fn is not None:
             return fn
-        body_fn = self._round if self.mesh is None else self._round_sharded
         holder = self._tap_holders.get(cache_key)
+        # the tap is ORDERED on a single host (log lines arrive in round
+        # order) but UNORDERED on a mesh, so per-host callback delivery
+        # never serialises the pods (ROADMAP item); each payload carries
+        # its ``round_in_block`` index so consumers can reassemble order.
+        ordered_tap = self.mesh is None
 
-        def block(trains, opts, keys, gbar, server_m, statics, batches):
-            def body(carry, xs):
-                tr, op, ks, gb, sm = carry
-                tr, op, ks, gb, sm, metrics = body_fn(
-                    tr, op, ks, gb, sm, statics, xs)
-                if holder is not None:
-                    from jax.experimental import io_callback
-                    io_callback(lambda metr: holder[0](metr), None,
-                                metrics, ordered=True)
-                return (tr, op, ks, gb, sm), metrics
+        def fire_tap(metrics, ridx):
+            if holder is None:
+                return
+            from jax.experimental import io_callback
+            io_callback(
+                lambda i, metr: holder[0](dict(metr,
+                                               round_in_block=int(i))),
+                None, ridx, metrics, ordered=ordered_tap)
 
-            # per-bucket batches carry leading (M, E, k_b, ...) axes and are
-            # scanned over; None buckets sample on-device from the carried
-            # RNG keys.  The stacked ys ARE the (M, ...) metric buffers.
-            (trains, opts, keys, gbar, server_m), metrics = jax.lax.scan(
-                body, (trains, opts, keys, gbar, server_m), batches,
-                length=m)
-            return trains, opts, keys, gbar, server_m, metrics
+        if plan is None:
+            body_fn = (self._round if self.mesh is None
+                       else self._round_sharded)
 
-        donate = (0, 1, 2, 3, 4) if self.ecfg.donate else ()
+            def block(trains, opts, keys, gbar, server_m, statics,
+                      batches):
+                def body(carry, xs):
+                    ridx, bt = xs
+                    tr, op, ks, gb, sm = carry
+                    tr, op, ks, gb, sm, metrics = body_fn(
+                        tr, op, ks, gb, sm, statics, bt)
+                    fire_tap(metrics, ridx)
+                    return (tr, op, ks, gb, sm), metrics
+
+                # per-bucket batches carry leading (M, E, k_b, ...) axes
+                # and are scanned over; None buckets sample on-device from
+                # the carried RNG keys.  The stacked ys ARE the (M, ...)
+                # metric buffers.
+                (trains, opts, keys, gbar, server_m), metrics = \
+                    jax.lax.scan(body, (trains, opts, keys, gbar,
+                                        server_m),
+                                 (jnp.arange(m), batches), length=m)
+                return trains, opts, keys, gbar, server_m, metrics
+
+            donate = (0, 1, 2, 3, 4) if self.ecfg.donate else ()
+        else:
+            part_body = (self._round_part if self.mesh is None
+                         else self._round_sharded_part)
+
+            def block(trains, opts, keys, gbar, server_m, part_state,
+                      statics, batches):
+                def body(carry, xs):
+                    ridx, bt = xs
+                    tr, op, ks, gb, sm, ps = carry
+                    tr, op, ks, gb, sm, ps, metrics = part_body(
+                        plan, tr, op, ks, gb, sm, ps, statics, bt)
+                    fire_tap(metrics, ridx)
+                    return (tr, op, ks, gb, sm, ps), metrics
+
+                (trains, opts, keys, gbar, server_m, part_state), \
+                    metrics = jax.lax.scan(
+                        body, (trains, opts, keys, gbar, server_m,
+                               part_state),
+                        (jnp.arange(m), batches), length=m)
+                return (trains, opts, keys, gbar, server_m, part_state,
+                        metrics)
+
+            donate = (0, 1, 2, 3, 4, 5) if self.ecfg.donate else ()
         fn = jax.jit(block, donate_argnums=donate)
         self._block_cache[cache_key] = fn
         return fn
 
-    def run_block(self, state, m: int, *, statics, batches=None, tap=None):
+    def run_block(self, state, m: int, *, statics, batches=None, tap=None,
+                  plan=None):
         """Run M fused rounds in ONE donated dispatch.
 
         ``state`` is the round carry ``(trains, opts, keys, gbar,
-        server_m)``; ``batches`` is a per-bucket tuple of either ``None``
-        (draw on-device from the carried RNG stream) or a pytree with
-        leading ``(M, E, k_b, ...)`` axes pre-staged on device.  Returns
-        ``(state, metrics)`` where every metrics leaf gained a leading M
-        axis (round-major).  The call is ASYNC: nothing blocks until the
-        caller materialises an output, so drivers can stage block N+1's
-        batches while block N is in flight."""
+        server_m)`` — plus the participation sampler state as a sixth
+        element when ``plan`` is given; ``batches`` is a per-bucket tuple
+        of either ``None`` (draw on-device from the carried RNG stream) or
+        a pytree with leading ``(M, E, k_b, ...)`` axes pre-staged on
+        device.  Returns ``(state, metrics)`` where every metrics leaf
+        gained a leading M axis (round-major).  The call is ASYNC: nothing
+        blocks until the caller materialises an output, so drivers can
+        stage block N+1's batches while block N is in flight."""
         if batches is None:
             batches = (None,) * self.n_buckets
-        out = self.block_fn(m, tap=tap)(*state, statics, batches)
-        return out[:5], out[5]
+        plan = part_mod.normalize(plan)
+        n_state = 5 if plan is None else 6
+        out = self.block_fn(m, tap=tap, plan=plan)(*state, statics,
+                                                   batches)
+        return out[:n_state], out[n_state]
 
 
 def _shard_map(fn, *, mesh, in_specs, out_specs):

@@ -70,7 +70,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -80,7 +80,9 @@ from repro.core import aggregation as agg
 from repro.core import cka as cka_mod
 from repro.core import engine as engine_mod
 from repro.core import lora as lora_mod
+from repro.core import participation as part_mod
 from repro.core import uncertainty as unc
+from repro.core.participation import ParticipationPlan  # re-export
 from repro.data.synthetic import SyntheticMultimodal
 from repro.data.tokenizers import FrozenTokenizer, default_tokenizers
 from repro.models import transformer as T
@@ -124,6 +126,11 @@ class FederationConfig:
     # legacy server step); 0.0 carries the state but reduces to the plain
     # average; > 0 accumulates the round pseudo-gradient.
     server_momentum: Optional[float] = None
+    # global-round LR schedule (round index -> multiplier), threaded
+    # through the engine's scan carry via the optimizer's "round" counter:
+    # warmup/cosine ACROSS fused round blocks without re-jitting.  ``None``
+    # keeps the exact legacy optimizer state structure.
+    round_lr_schedule: Optional[Callable] = None
 
 
 def _stopgrad_named(tree, names=("dora_m",)):
@@ -211,7 +218,8 @@ class SequentialFederation:
         # ---- per-node state: shared trainables + local adapter ----
         self.node_modality = [fed.modalities[i % len(fed.modalities)]
                               for i in range(fed.n_nodes)]
-        self.opt = AdamW(lr=fed.lr, weight_decay=0.0, grad_clip=1.0)
+        self.opt = AdamW(lr=fed.lr, weight_decay=0.0, grad_clip=1.0,
+                         round_schedule=fed.round_lr_schedule)
         self.nodes = []
         for i in range(fed.n_nodes):
             m = self.node_modality[i]
@@ -339,11 +347,29 @@ class SequentialFederation:
                                     "pooled": pooled, "pooled_a": pooled_a}
 
     # ------------------------------------------------------------------
-    def run_round(self) -> dict:
+    def run_round(self, participants=None) -> dict:
+        """One protocol round.  ``participants`` (an iterable of node ids)
+        restricts the round to a reporting cohort: non-participants do
+        NOTHING — their trainables, optimizer moments and RNG keys carry
+        through untouched, they contribute nothing to the consensus Gram /
+        LAP precision pool / side-car average, and they still receive the
+        server broadcast at round end (next-round downlink).  ``None`` is
+        the exact legacy full-participation round."""
         fed = self.fed
+        active = (None if participants is None else set(participants))
+        k_active = fed.n_nodes if active is None else len(active)
+        if active is not None and k_active == 0:
+            raise ValueError("empty participant set")
         grams, precisions, shipped_list = [], [], []
         metrics = {"task": [], "geo": [], "acc": []}
+        self._last_raw_precisions = {}
         for i, node in enumerate(self.nodes):
+            if active is not None and i not in active:
+                continue
+            if "round" in node["opt_state"]:
+                node["opt_state"] = dict(
+                    node["opt_state"],
+                    round=node["opt_state"]["round"] + 1)
             m = node["modality"]
             anchors = (self.synthetic_anchor_tokens[m]
                        if i in fed.synthetic_anchor_nodes
@@ -376,6 +402,10 @@ class SequentialFederation:
             grams.append(cka_mod.cosine_gram(last["pooled_a"]))
             u = unc.lap_uncertainty(last["pooled"], last["pooled_a"])
             precisions.append(unc.node_precision(u))
+            # device array, NOT float(): materialising here would force a
+            # host sync per node per round even in full-participation runs
+            # (only the precision-strategy sampler ever reads these)
+            self._last_raw_precisions[i] = precisions[-1]
             smask = _shipped_mask(node["trainable"])
             shipped, _ = _split_by_mask(node["trainable"], smask)
             # bridge nodes carry extra local-only keys (adapter2) that are
@@ -384,24 +414,24 @@ class SequentialFederation:
                        if any(l is not None for l in jax.tree.leaves(
                            v, is_leaf=lambda x: x is None))}
             shipped_list.append(shipped)
-            node["_smask"] = smask
 
-        # ---- server ----
+        # ---- server (averages over whichever nodes reported) ----
         grams = jnp.stack(grams)
         self.gbar = cka_mod.consensus_gram(grams)
         if fed.aggregation == "precision":
             weights = unc.precision_weights(jnp.stack(precisions))
         else:
-            weights = jnp.full((fed.n_nodes,), 1.0 / fed.n_nodes)
+            weights = jnp.full((k_active,), 1.0 / k_active)
         avg_shipped = agg.aggregate_geolora(shipped_list, weights)
+        # broadcast to EVERY node, participants or not (next-round downlink)
         for node in self.nodes:
             merged = dict(avg_shipped)
             for k in node["trainable"]:
                 if k not in merged:
                     merged[k] = jax.tree.map(lambda _: None,
                                              node["trainable"][k])
-            node["trainable"] = _merge_by_mask(merged, node["trainable"],
-                                               node["_smask"])
+            node["trainable"] = _merge_by_mask(
+                merged, node["trainable"], _shipped_mask(node["trainable"]))
 
         off_diag = cka_mod.mean_offdiag_cka(grams, center=fed.center_cka)
         shipped_bytes = agg.comm_bytes_per_round(
@@ -410,25 +440,102 @@ class SequentialFederation:
             lora_mod.combine(self.nodes[0]["trainable"],
                              self._frozen_for(self.nodes[0])))
         rec = {
-            "task_loss": sum(metrics["task"]) / fed.n_nodes,
-            "geo_loss": sum(metrics["geo"]) / fed.n_nodes,
-            "acc": sum(metrics["acc"]) / fed.n_nodes,
+            "task_loss": sum(metrics["task"]) / k_active,
+            "geo_loss": sum(metrics["geo"]) / k_active,
+            "acc": sum(metrics["acc"]) / k_active,
             "cross_node_cka": float(off_diag),
-            "weights": [float(w) for w in weights],
             "uplink_bytes": int(shipped_bytes),
             "full_model_bytes": int(full_bytes),
         }
+        if active is None:
+            rec["weights"] = [float(w) for w in weights]
+        else:
+            # full-length weight vector, zero at non-reporting nodes, plus
+            # the per-round participation log the engine also emits
+            ordered = sorted(active)
+            wfull = [0.0] * fed.n_nodes
+            for wi, i in zip(weights, ordered):
+                wfull[i] = float(wi)
+            rec["weights"] = wfull
+            rec["participation"] = [1.0 if i in active else 0.0
+                                    for i in range(fed.n_nodes)]
+            rec["cohort_size"] = k_active
         self.history.append(rec)
         return rec
 
-    def run_rounds(self, n: int, block_size: int = 1) -> List[dict]:
+    # ------------------------------------------------------------------
+    # participation (sequential reference): the SAME sampler functions the
+    # engine traces into its compiled round run here eagerly, over the
+    # same width-bucket group layout, so the cohort sequence is identical
+    # — this class is the oracle the masked/compacted engine paths are
+    # equivalence-tested against.
+    def _node_width(self, node) -> int:
+        """Adapter width the node needs inside its bucket: its tokenizer's
+        d_out, or for a bridge node the max of its two adapters' widths."""
+        d = self.tokenizers[node["modality"]].d_out
+        if node.get("bridge"):
+            d = max(d, self.tokenizers[node["modality2"]].d_out)
+        return d
+
+    def _participation_groups(self) -> tuple:
+        """Canonical node ids per width bucket — the sampler's group
+        layout, mirroring the engine's default bucketed layout."""
+        nodes = self.nodes
+        widths = [self._node_width(n) for n in nodes]
+        bucket_widths = tuple(sorted(set(widths)))
+        return tuple(tuple(i for i, w in enumerate(widths) if w == wb)
+                     for wb in bucket_widths)
+
+    def _sample_participants(self, plan):
+        """Advance the carried sampler state one round and return the
+        participating canonical node ids."""
+        groups = self._participation_groups()
+        prev = getattr(self, "_seq_part", None)
+        if prev is None or prev[0] != plan:
+            state = part_mod.init_state(plan, self.fed.n_nodes)
+        else:
+            state = prev[1]
+        row_masks, _, state = part_mod.sample_rows(plan, state, groups)
+        self._seq_part = (plan, state)
+        parts = [g[r] for g, mask in zip(groups, row_masks)
+                 for r in range(len(g)) if float(mask[r]) > 0]
+        return sorted(parts), groups
+
+    def _update_seq_sampler(self, plan, groups, participants):
+        """Fold this round's reported precisions into the sampler state
+        (precision-proportional strategy), mirroring the engine's
+        on-device ``update_state``."""
+        if plan.strategy != "precision":
+            return
+        plan_, state = self._seq_part
+        rows = [i for g in groups for i in g]         # row order
+        mask = jnp.asarray([1.0 if i in participants else 0.0
+                            for i in rows], jnp.float32)
+        p = jnp.asarray([float(self._last_raw_precisions.get(i, 0.0))
+                         for i in rows], jnp.float32)
+        self._seq_part = (plan_, part_mod.update_state(plan, state, mask,
+                                                       p))
+
+    def run_rounds(self, n: int, block_size: int = 1,
+                   participation=None) -> List[dict]:
         """Run ``n`` rounds.  ``block_size`` is accepted for API parity with
         the engine-backed ``Federation`` (whose blocks fuse M rounds into
-        one dispatch); the sequential reference always steps per round."""
-        return [self.run_round() for _ in range(n)]
+        one dispatch); the sequential reference always steps per round.
+        ``participation`` accepts a ``ParticipationPlan`` (or strategy
+        string): cohorts are sampled eagerly with the engine's sampler."""
+        plan = part_mod.normalize(participation)
+        if plan is None:
+            return [self.run_round() for _ in range(n)]
+        recs = []
+        for _ in range(n):
+            parts, groups = self._sample_participants(plan)
+            recs.append(self.run_round(participants=parts))
+            self._update_seq_sampler(plan, groups, set(parts))
+        return recs
 
-    def run(self, block_size: int = 1) -> List[dict]:
-        self.run_rounds(self.fed.rounds, block_size)
+    def run(self, block_size: int = 1, participation=None) -> List[dict]:
+        self.run_rounds(self.fed.rounds, block_size,
+                        participation=participation)
         return self.history
 
     # ------------------------------------------------------------------
@@ -509,14 +616,6 @@ class Federation(SequentialFederation):
         self._nodes = value
 
     # ------------------------------------------------------------------
-    def _node_width(self, node) -> int:
-        """Adapter width the node needs inside its bucket: its tokenizer's
-        d_out, or for a bridge node the max of its two adapters' widths."""
-        d = self.tokenizers[node["modality"]].d_out
-        if node.get("bridge"):
-            d = max(d, self.tokenizers[node["modality2"]].d_out)
-        return d
-
     def _bucket_layout(self, widths, mesh):
         """Per-node widths -> (bucket_widths, buckets).  With a mesh, every
         bucket's node count must divide the shard count; when the bucketed
@@ -718,7 +817,18 @@ class Federation(SequentialFederation):
         return local_step
 
     # ------------------------------------------------------------------
-    def run_round(self) -> dict:
+    def run_round(self, participants=None) -> dict:
+        """One engine round.  ``participants`` mirrors the sequential
+        reference's explicit-cohort hook by running a one-shot fixed
+        ``nodes`` participation plan (each DISTINCT cohort compiles its
+        own round program — for per-round sampled cohorts use
+        ``run_rounds(participation=...)``, which samples inside one
+        compiled program)."""
+        if participants is not None:
+            plan = part_mod.ParticipationPlan(
+                strategy="nodes", nodes=tuple(sorted(participants)))
+            self._ensure_participation(plan)
+            return self._run_round_part(plan)
         # round-state buffers are donated: the previous round's arrays are
         # invalidated by this call and replaced by the outputs
         (self._trains, self._opts, self._keys, self.gbar, self._server_m,
@@ -733,21 +843,53 @@ class Federation(SequentialFederation):
     def _metrics_record(self, metrics, r: Optional[int] = None) -> dict:
         """One history record from engine metrics — per-round metrics when
         ``r`` is None, else round ``r`` of a block's stacked (M, ...)
-        metric buffers."""
+        metric buffers.  Participation-aware metrics (per-node scalars are
+        zero at non-reporting nodes) average over the cohort."""
         sl = (lambda x: x) if r is None else (lambda x: x[r])
         s = metrics["scalars"]
-        return {
-            "task_loss": float(jnp.mean(sl(s["task"]))),
-            "geo_loss": float(jnp.mean(sl(s["geo"]))),
-            "acc": float(jnp.mean(sl(s["acc"]))),
+        if "participation" in metrics:
+            c = max(float(sl(metrics["cohort_size"])), 1.0)
+            mean = lambda x: float(jnp.sum(sl(x))) / c
+        else:
+            mean = lambda x: float(jnp.mean(sl(x)))
+        rec = {
+            "task_loss": mean(s["task"]),
+            "geo_loss": mean(s["geo"]),
+            "acc": mean(s["acc"]),
             "cross_node_cka": float(sl(metrics["cross_node_cka"])),
             "weights": [float(w) for w in sl(metrics["weights"])],
             "uplink_bytes": self._uplink_bytes,
             "full_model_bytes": self._full_bytes,
         }
+        if "participation" in metrics:
+            rec["participation"] = [float(p)
+                                    for p in sl(metrics["participation"])]
+            rec["cohort_size"] = int(round(float(sl(
+                metrics["cohort_size"]))))
+        return rec
 
-    def run_rounds(self, n: int, block_size: int = 1,
-                   tap=None) -> List[dict]:
+    def _ensure_participation(self, plan) -> None:
+        """Install ``plan`` as the active participation plan, carrying the
+        sampler state across calls (and through checkpoints) when the plan
+        is unchanged, re-seeding it when the plan switches."""
+        if getattr(self, "_part_plan", None) != plan \
+                or not hasattr(self, "_part_state"):
+            self._part_plan = plan
+            self._part_state = part_mod.init_state(plan, self.fed.n_nodes)
+
+    def _run_round_part(self, plan) -> dict:
+        (self._trains, self._opts, self._keys, self.gbar, self._server_m,
+         self._part_state, metrics) = self.engine.part_round_fn(plan)(
+            self._trains, self._opts, self._keys, self.gbar,
+            self._server_m, self._part_state, self._staticss,
+            (None,) * len(self._trains))
+        rec = self._metrics_record(metrics)
+        self._views_stale = True
+        self.history.append(rec)
+        return rec
+
+    def run_rounds(self, n: int, block_size: int = 1, tap=None,
+                   participation=None) -> List[dict]:
         """Run ``n`` rounds; with ``block_size`` M > 1, rounds execute as
         fused M-round blocks (``engine.run_block``): ONE donated dispatch
         and one host sync per block instead of per round.  Dispatch is
@@ -756,19 +898,41 @@ class Federation(SequentialFederation):
         materialise after the last block is in flight.  ``block_size=1`` is
         the exact legacy per-round path.  ``tap`` (block mode) streams each
         round's metrics to the host via ``io_callback`` without forcing a
-        sync."""
-        if block_size <= 1:
-            return [self.run_round() for _ in range(n)]
-        pending, done = [], 0
-        while done < n:
-            m = min(block_size, n - done)
-            state = (self._trains, self._opts, self._keys, self.gbar,
-                     self._server_m)
-            (self._trains, self._opts, self._keys, self.gbar,
-             self._server_m), metrics = self.engine.run_block(
-                state, m, statics=self._staticss, tap=tap)
-            pending.append((m, metrics))
-            done += m
+        sync.
+
+        ``participation`` (a ``ParticipationPlan`` or strategy string)
+        samples a reporting cohort per round on device; the sampler state
+        rides the block carry and the checkpoint.  ``None`` / ``"full"``
+        is routed onto the unchanged legacy path (bit-identical)."""
+        plan = part_mod.normalize(participation)
+        if plan is None:
+            if block_size <= 1:
+                return [self.run_round() for _ in range(n)]
+            pending, done = [], 0
+            while done < n:
+                m = min(block_size, n - done)
+                state = (self._trains, self._opts, self._keys, self.gbar,
+                         self._server_m)
+                (self._trains, self._opts, self._keys, self.gbar,
+                 self._server_m), metrics = self.engine.run_block(
+                    state, m, statics=self._staticss, tap=tap)
+                pending.append((m, metrics))
+                done += m
+        else:
+            self._ensure_participation(plan)
+            if block_size <= 1:
+                return [self._run_round_part(plan) for _ in range(n)]
+            pending, done = [], 0
+            while done < n:
+                m = min(block_size, n - done)
+                state = (self._trains, self._opts, self._keys, self.gbar,
+                         self._server_m, self._part_state)
+                (self._trains, self._opts, self._keys, self.gbar,
+                 self._server_m, self._part_state), metrics = \
+                    self.engine.run_block(state, m, statics=self._staticss,
+                                          tap=tap, plan=plan)
+                pending.append((m, metrics))
+                done += m
         self._views_stale = True
         recs = [self._metrics_record(metrics, r)
                 for m, metrics in pending for r in range(m)]
@@ -808,6 +972,8 @@ class Federation(SequentialFederation):
                 "v": self._unpad_node_tree(opt_i["v"], node),
                 "step": opt_i["step"],
             }
+            if "round" in opt_i:
+                node["opt_state"]["round"] = opt_i["round"]
             node["key"] = self._keys[b][r]
 
     # ------------------------------------------------------------------
@@ -821,16 +987,23 @@ class Federation(SequentialFederation):
                  "opt": self._opts, "keys": self._keys}
         if self._server_m is not None:
             state["server_m"] = self._server_m
+        if getattr(self, "_part_state", None) is not None:
+            state["part"] = self._part_state
         return state
 
     def save(self, path: str) -> None:
         from repro.checkpoint import save_checkpoint
         # the saved state IS the engine's block carry (trains / opts / keys
-        # / gbar / server-opt), so a save at a block boundary captures
-        # everything a resumed run_block needs to continue bit-identically
+        # / gbar / server-opt / participation sampler), so a save at a
+        # block boundary captures everything a resumed run_block needs to
+        # continue bit-identically — including the cohort sampling stream
         save_checkpoint(path, self._ckpt_state(), step=len(self.history),
                         meta={"server_momentum": self.fed.server_momentum,
-                              "n_buckets": len(self._trains)})
+                              "n_buckets": len(self._trains),
+                              "round_schedule":
+                                  self.fed.round_lr_schedule is not None,
+                              "participation": part_mod.plan_meta(
+                                  getattr(self, "_part_plan", None))})
 
     def restore(self, path: str) -> int:
         from repro.checkpoint import load_checkpoint, read_meta
@@ -840,6 +1013,27 @@ class Federation(SequentialFederation):
                 f"checkpoint server_momentum={meta.get('server_momentum')} "
                 f"does not match config {self.fed.server_momentum}; the "
                 f"block carry structure differs")
+        if bool(meta.get("round_schedule", False)) != \
+                (self.fed.round_lr_schedule is not None):
+            raise ValueError(
+                f"checkpoint round_schedule="
+                f"{bool(meta.get('round_schedule', False))} does not match "
+                f"config round_lr_schedule="
+                f"{self.fed.round_lr_schedule is not None}; the optimizer "
+                f"carry structure (round counter) differs")
+        plan = part_mod.plan_from_meta(meta.get("participation"))
+        if plan is not None:
+            # the sampler state is part of the checkpointed carry; restore
+            # resumes the cohort stream without the caller re-passing the
+            # plan (run_rounds with the same plan keeps the state)
+            self._part_plan = plan
+            self._part_state = part_mod.init_state(plan, self.fed.n_nodes)
+        else:
+            # a full-participation checkpoint must also restore INTO a
+            # federation that previously ran with a plan: drop the stale
+            # sampler state so the carry template matches the file
+            self._part_plan = None
+            self._part_state = None
         state, step = load_checkpoint(path, self._ckpt_state())
         self.gbar = state["gbar"]
         self._trains = state["train"]
@@ -847,5 +1041,7 @@ class Federation(SequentialFederation):
         self._keys = state["keys"]
         if "server_m" in state:
             self._server_m = state["server_m"]
+        if "part" in state:
+            self._part_state = state["part"]
         self._views_stale = True
         return step

@@ -1,0 +1,277 @@
+"""Participation layer: sampled cohorts, straggler masks, sampler state.
+
+The paper's server protocol (Eqs. 2 & 6) averages side-cars and consensus
+Grams over *whichever nodes report* — nothing in the math requires full
+synchronous participation.  Real cross-silo deployments sample a cohort per
+round and tolerate dropouts/stragglers, so the engine threads a
+``ParticipationPlan`` through every level of the stack:
+
+  - **full** — every node, every round (the legacy path; callers that pass
+    this plan are routed onto the exact pre-participation compiled round);
+  - **uniform** — C of K nodes per round, sampled without replacement,
+    BUCKET-STRATIFIED: cohort slots are allocated to the engine's width
+    buckets by largest-remainder proportional allocation with at least
+    one slot per bucket (static per-bucket cohort sizes — what lets the
+    compiled round GATHER the cohort rows into compact ``(c_b, ...)``
+    states and pay compute proportional to C, not K), then sampled
+    uniformly within each bucket.  Inclusion probability is c_b / k_b per
+    bucket (proportional up to the +-1 slot granularity), not exactly
+    uniform over all C-subsets of K — see ``allocate_cohort``;
+  - **precision** — like ``uniform`` but within-bucket sampling is
+    proportional to each node's LAST reported LAP precision (Gumbel-top-k
+    over ``log p_k``), so unreliable nodes are polled less often; the
+    carried precision estimates ride the sampler state;
+  - **dropout** — a deterministic straggler simulator: every node
+    independently fails to report with probability ``dropout_rate`` (drawn
+    from the carried RNG, so runs are reproducible).  The cohort size
+    varies per round, so execution falls back to the masked path (all K
+    compute, non-reporters' state carried through untouched);
+  - **nodes** — a fixed explicit cohort (deterministic stragglers /
+    partial-deployment configs; also the oracle-equivalence test hook).
+
+Sampling runs ON DEVICE from the carried sampler state (an RNG key, plus
+precision estimates for ``precision``), so it composes with the fused
+``lax.scan`` round blocks: the state is part of the donated block carry and
+a checkpoint of the carry resumes the sampling stream bit-identically.  All
+sampling functions are pure jax and run eagerly too — the sequential
+reference federation calls the SAME functions on host to produce the oracle
+cohort sequence for the engine-equivalence tests.
+
+Semantics of non-participation: a node that is not sampled (or drops out)
+does NOTHING that round — its trainables, optimizer moments and RNG key
+carry through untouched and it contributes nothing to the consensus Gram,
+the LAP precision pool, or the side-car average.  It still RECEIVES the
+server broadcast (downlink at next round start), matching cross-device
+FedAvg semantics and keeping the engine's replicated-shipped-row invariant.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+STRATEGIES = ("full", "uniform", "precision", "dropout", "nodes")
+
+
+@dataclass(frozen=True)
+class ParticipationPlan:
+    """Static participation config (hashable: keys the engine's compiled
+    round/block caches).  ``seed`` feeds the carried sampler RNG;
+    ``compact`` opts the static-cohort strategies out of gather-compact
+    execution (masked fallback — the two paths are equivalence-tested)."""
+    strategy: str = "full"
+    cohort_size: Optional[int] = None          # uniform | precision
+    dropout_rate: float = 0.25                 # dropout
+    nodes: Tuple[int, ...] = ()                # nodes (fixed cohort)
+    seed: int = 0
+    compact: bool = True
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"unknown participation strategy "
+                             f"{self.strategy!r}; expected one of "
+                             f"{STRATEGIES}")
+        if self.strategy in ("uniform", "precision") \
+                and not self.cohort_size:
+            raise ValueError(f"strategy {self.strategy!r} needs a "
+                             f"cohort_size")
+        if self.strategy == "nodes" and not self.nodes:
+            raise ValueError("strategy 'nodes' needs a non-empty node set")
+        if self.strategy == "dropout" \
+                and not 0.0 <= self.dropout_rate < 1.0:
+            raise ValueError(f"dropout_rate {self.dropout_rate} outside "
+                             f"[0, 1)")
+
+
+def normalize(plan) -> Optional[ParticipationPlan]:
+    """None / "full" / full-plan -> None (the legacy engine path, which is
+    bit-identical to the pre-participation engine); strings become plans."""
+    if plan is None:
+        return None
+    if isinstance(plan, str):
+        plan = ParticipationPlan(strategy=plan)
+    if plan.strategy == "full":
+        return None
+    return plan
+
+
+def static_cohort(plan: ParticipationPlan) -> bool:
+    """True when the per-round cohort size is a compile-time constant —
+    the strategies the engine can execute gather-compact."""
+    return plan.strategy in ("uniform", "precision", "nodes")
+
+
+def init_state(plan: Optional[ParticipationPlan], n_nodes: int):
+    """Carried sampler state (rides the fused-block carry and the
+    checkpoint): an RNG key for the stochastic strategies, plus the
+    running per-node precision estimates (ENGINE ROW order) for
+    ``precision``.  ``None`` for stateless strategies."""
+    plan = normalize(plan)
+    if plan is None or plan.strategy == "nodes":
+        return None
+    state = {"key": jax.random.PRNGKey(plan.seed)}
+    if plan.strategy == "precision":
+        state["prev_p"] = jnp.ones((n_nodes,), jnp.float32)
+    return state
+
+
+def allocate_cohort(c: int, group_sizes) -> Tuple[int, ...]:
+    """Largest-remainder proportional allocation of C cohort slots over the
+    width buckets: static per-bucket cohort sizes (sum == C, each <= the
+    bucket size) so the compiled round can gather fixed-shape cohort
+    states.  Deterministic: ties broken by bucket index.
+
+    Every non-empty bucket is guaranteed at least one slot (requires
+    C >= number of buckets), so no node is permanently starved by a
+    zero-quota bucket — the allocation is static across rounds, which is
+    what makes the compacted shapes compile-time constants.  Within a
+    bucket, sampling is uniform; ACROSS buckets inclusion probability is
+    c_b / k_b (proportional up to the +-1 slot granularity), i.e. the
+    strategies are bucket-STRATIFIED rather than exactly uniform over all
+    C-subsets of K — the price of cohort-shaped compute.  Use ``dropout``
+    or an explicit ``nodes`` plan when exact global semantics matter."""
+    k = sum(group_sizes)
+    n_groups = len(group_sizes)
+    if not 1 <= c <= k:
+        raise ValueError(f"cohort_size {c} outside [1, {k}]")
+    if c < n_groups:
+        raise ValueError(
+            f"cohort_size {c} < {n_groups} width buckets: the static "
+            f"per-bucket allocation would permanently starve a bucket; "
+            f"use cohort_size >= {n_groups}, an explicit nodes= plan, or "
+            f"the dropout strategy")
+    # one guaranteed slot per bucket, remainder by largest-remainder on
+    # the proportional quotas of the leftover slots
+    base = [1] * n_groups
+    rest = c - n_groups
+    quotas = [rest * (s - 1) / max(k - n_groups, 1) for s in group_sizes]
+    add = [min(int(q), s - 1) for q, s in zip(quotas, group_sizes)]
+    rem = rest - sum(add)
+    order = sorted(range(n_groups),
+                   key=lambda b: (add[b] - quotas[b], b))
+    for b in order:
+        if rem == 0:
+            break
+        room = group_sizes[b] - 1 - add[b]
+        take = min(room, 1)
+        add[b] += take
+        rem -= take
+    # any residue (buckets at capacity) goes wherever room remains
+    for b in range(n_groups):
+        while rem > 0 and base[b] + add[b] < group_sizes[b]:
+            add[b] += 1
+            rem -= 1
+    base = [b_ + a for b_, a in zip(base, add)]
+    assert sum(base) == c and all(1 <= cb <= s for cb, s
+                                  in zip(base, group_sizes))
+    return tuple(base)
+
+
+def _guarded(keep: Array) -> Array:
+    """Never let every node drop out (an empty round divides by zero and
+    stalls the protocol): an all-dropped draw degrades to full
+    participation, which is what a production server waiting on a quorum
+    would effectively do."""
+    return jnp.where(keep.any(), keep,
+                     jnp.ones_like(keep)).astype(jnp.float32)
+
+
+def sample_rows(plan: ParticipationPlan, state, groups):
+    """One round of cohort sampling.  ``groups`` is the engine's bucket
+    layout as a tuple of tuples of CANONICAL node ids (row order within
+    each bucket).  Pure jax — traceable inside the compiled round/block
+    AND runnable eagerly by the sequential oracle.
+
+    Returns ``(row_masks, cohort_rows, new_state)``:
+      - ``row_masks[b]``: (k_b,) float32 0/1 participation per bucket row;
+      - ``cohort_rows[b]``: (c_b,) int32 participating rows (sorted), or
+        ``None`` for strategies without a static cohort (dropout);
+      - ``new_state``: advanced sampler state (same structure as input).
+    """
+    sizes = tuple(len(g) for g in groups)
+
+    if plan.strategy == "nodes":
+        chosen = set(plan.nodes)
+        rows = tuple(
+            jnp.asarray([r for r, i in enumerate(g) if i in chosen],
+                        jnp.int32) for g in groups)
+        if sum(int(r.shape[0]) for r in rows) != len(chosen):
+            raise ValueError(f"plan nodes {plan.nodes} are not all present "
+                             f"in the federation's {sum(sizes)} nodes")
+        masks = tuple(jnp.zeros((s,), jnp.float32).at[r].set(1.0)
+                      for s, r in zip(sizes, rows))
+        return masks, rows, state
+
+    key, sub = jax.random.split(state["key"])
+    new_state = dict(state, key=key)
+
+    if plan.strategy == "dropout":
+        keep = jax.random.bernoulli(
+            sub, 1.0 - plan.dropout_rate, (sum(sizes),))
+        mask = _guarded(keep)
+        off, masks = 0, []
+        for s in sizes:
+            masks.append(mask[off:off + s])
+            off += s
+        return tuple(masks), None, new_state
+
+    # uniform / precision: static per-bucket cohort sizes
+    c_bs = allocate_cohort(plan.cohort_size, sizes)
+    gkeys = jax.random.split(sub, len(sizes))
+    rows, masks, off = [], [], 0
+    for b, (s, cb) in enumerate(zip(sizes, c_bs)):
+        if plan.strategy == "precision":
+            # Gumbel-top-k over log p: draws c_b rows WITHOUT replacement
+            # with inclusion proportional-ish to the carried precision
+            # estimates, so low-precision (unreliable) nodes are polled
+            # less often but never starved outright
+            p = jnp.maximum(new_state["prev_p"][off:off + s], 1e-12)
+            g = -jnp.log(-jnp.log(jnp.maximum(
+                jax.random.uniform(gkeys[b], (s,)), 1e-12)))
+            scores = jnp.log(p) + g
+        else:
+            scores = jax.random.uniform(gkeys[b], (s,))
+        # top-c_b rows, then sorted so gather order is row order
+        idx = jnp.sort(jax.lax.top_k(scores, cb)[1].astype(jnp.int32)) \
+            if cb else jnp.zeros((0,), jnp.int32)
+        rows.append(idx)
+        masks.append(jnp.zeros((s,), jnp.float32).at[idx].set(1.0)
+                     if cb else jnp.zeros((s,), jnp.float32))
+        off += s
+    return tuple(masks), tuple(rows), new_state
+
+
+def update_state(plan: ParticipationPlan, state, mask_rows: Array,
+                 precisions_rows: Array):
+    """Post-round sampler-state update: the ``precision`` strategy folds
+    this round's reported LAP precisions into its carried estimates at the
+    reporting rows (non-reporters keep their previous estimate).  Both
+    arrays are (K,) in ENGINE ROW order."""
+    if plan.strategy != "precision" or state is None:
+        return state
+    prev = state["prev_p"]
+    new_p = jnp.where(mask_rows > 0,
+                      precisions_rows.astype(jnp.float32), prev)
+    return dict(state, prev_p=new_p)
+
+
+def plan_meta(plan: Optional[ParticipationPlan]):
+    """JSON-serialisable plan description for checkpoint metadata."""
+    if plan is None:
+        return None
+    return {"strategy": plan.strategy, "cohort_size": plan.cohort_size,
+            "dropout_rate": plan.dropout_rate, "nodes": list(plan.nodes),
+            "seed": plan.seed, "compact": plan.compact}
+
+
+def plan_from_meta(meta) -> Optional[ParticipationPlan]:
+    if not meta:
+        return None
+    return ParticipationPlan(
+        strategy=meta["strategy"], cohort_size=meta["cohort_size"],
+        dropout_rate=meta["dropout_rate"], nodes=tuple(meta["nodes"]),
+        seed=meta["seed"], compact=meta.get("compact", True))

@@ -42,3 +42,14 @@ def precision_weights(node_precisions: Array) -> Array:
     (the paper's 1/E factor)."""
     p = jnp.maximum(node_precisions.astype(jnp.float32), 0.0)
     return p / jnp.maximum(p.sum(), 1e-12)
+
+
+def masked_precision_weights(node_precisions: Array, mask: Array) -> Array:
+    """Masked LAP precision upload (partial participation): only REPORTING
+    nodes (``mask`` (K,) 0/1) contribute their precision, and the
+    normalisation runs over the reporting cohort — non-reporters get
+    exactly zero aggregation weight.  Reduces to ``precision_weights``
+    under a full mask."""
+    p = jnp.maximum(node_precisions.astype(jnp.float32), 0.0) \
+        * mask.astype(jnp.float32)
+    return p / jnp.maximum(p.sum(), 1e-12)

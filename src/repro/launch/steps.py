@@ -104,6 +104,8 @@ def make_fed_train_step(cfg: ModelConfig, rt: T.Runtime, opt: AdamW, *,
         node_opt = {"m": _none_map(bcast, opt_state["m"]),
                     "v": _none_map(bcast, opt_state["v"]),
                     "step": bcast(opt_state["step"])}
+        if "round" in opt_state:      # global-round LR schedule counter
+            node_opt["round"] = bcast(opt_state["round"])
         keys = jnp.zeros((k_nodes, 2), jnp.uint32)        # data comes in
 
         trains, opts, _, new_gbar, _, metrics = engine.round_fn(
@@ -118,6 +120,8 @@ def make_fed_train_step(cfg: ModelConfig, rt: T.Runtime, opt: AdamW, *,
         new_opt = {"m": _none_map(wavg, opts[0]["m"]),
                    "v": _none_map(wavg, opts[0]["v"]),
                    "step": opts[0]["step"][0]}
+        if "round" in opts[0]:
+            new_opt["round"] = opts[0]["round"][0]
         return new_train, new_opt, new_gbar, \
             {"task": metrics["scalars"]["task"].mean(),
              "geo": metrics["scalars"]["geo"].mean()}

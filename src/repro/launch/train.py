@@ -14,13 +14,26 @@ tensor and shipped as a single async transfer, the NEXT block's batches are
 staged while the current block is in flight (double buffering), and
 per-round metrics stream back through an ``io_callback`` tap — the host
 never blocks between blocks, so dispatches and blocking syncs drop to 1/M
-per round.  ``--block-size 1`` is the exact legacy per-round path.
-``--server-momentum`` enables FedOpt-style momentum on the averaged
-side-cars in the engine's server step.  Communication per round is
-low-rank-sized — the paper's efficiency claim, printed per round.
+per round.  ``--block-size 1`` is the exact legacy per-round path;
+``--block-size auto`` measures the host dispatch overhead once at startup
+(the first two rounds run per-round and are timed) and picks M so host
+work stays under 5% of round time.  ``--server-momentum`` enables
+FedOpt-style momentum on the averaged side-cars in the engine's server
+step.  ``--warmup-rounds N`` turns on a warmup+cosine LR schedule keyed on
+the GLOBAL round counter the engine threads through the scan carry, so the
+schedule advances across fused blocks without re-jitting.
+
+Partial participation (``--participation uniform --cohort-size C``,
+``--participation dropout --dropout-rate p``, or ``precision``): each
+round's reporting cohort is sampled ON DEVICE from a carried sampler
+state, so sampling composes with the fused blocks; non-reporting nodes
+carry their state through untouched and the server averages over exactly
+the cohort.  Communication per round is low-rank-sized — the paper's
+efficiency claim, printed per round.
 
   PYTHONPATH=src python -m repro.launch.train --arch fedmm-small \
-      --rounds 8 --block-size 4 --local-steps 4 --batch 8 --seq 128 --tiny
+      --rounds 8 --block-size 4 --local-steps 4 --batch 8 --seq 128 \
+      --participation uniform --cohort-size 2 --tiny
 """
 from __future__ import annotations
 
@@ -33,11 +46,12 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.core import cka as cka_mod
 from repro.core import lora as lora_mod
-from repro.core.engine import EngineConfig, RoundEngine
+from repro.core import participation as part_mod
+from repro.core.engine import EngineConfig, RoundEngine, auto_block_size
 from repro.data.pipeline import BlockStager, SyntheticLMStream
 from repro.models import transformer as T
 from repro.models.common import cross_entropy_loss
-from repro.optim.adamw import AdamW
+from repro.optim.adamw import AdamW, warmup_cosine
 
 
 def _broadcast_tree(tree, k):
@@ -61,11 +75,24 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--lambda-geo", type=float, default=1.0)
     ap.add_argument("--rank", type=int, default=8)
-    ap.add_argument("--block-size", type=int, default=1,
-                    help="fuse M rounds per dispatch (1 = legacy per-round)")
+    ap.add_argument("--block-size", default="1",
+                    help="fuse M rounds per dispatch (1 = legacy "
+                         "per-round; 'auto' measures dispatch overhead at "
+                         "startup and picks M for < 5%% host work)")
     ap.add_argument("--server-momentum", type=float, default=None,
                     help="server-side FedOpt momentum on the averaged "
                          "side-cars (off when unset)")
+    ap.add_argument("--participation", default="full",
+                    choices=["full", "uniform", "precision", "dropout"],
+                    help="per-round cohort sampling strategy")
+    ap.add_argument("--cohort-size", type=int, default=None,
+                    help="nodes sampled per round (uniform / precision)")
+    ap.add_argument("--dropout-rate", type=float, default=0.25,
+                    help="per-node straggler probability (dropout)")
+    ap.add_argument("--participation-seed", type=int, default=0)
+    ap.add_argument("--warmup-rounds", type=int, default=0,
+                    help="> 0 turns on warmup+cosine LR over GLOBAL "
+                         "rounds (threaded through the fused-block carry)")
     ap.add_argument("--tiny", action="store_true",
                     help="shrink the model for CPU smoke runs")
     ap.add_argument("--precision-weighting", action="store_true",
@@ -91,7 +118,12 @@ def main(argv=None):
     else:
         mask = jax.tree.map(lambda _: True, params)
     trainable, frozen = lora_mod.partition(params, mask)
-    opt = AdamW(lr=args.lr, grad_clip=1.0)
+    round_sched = (warmup_cosine(args.warmup_rounds, max(args.rounds, 1))
+                   if args.warmup_rounds > 0 else None)
+    opt = AdamW(lr=args.lr, grad_clip=1.0, round_schedule=round_sched)
+    plan = part_mod.normalize(part_mod.ParticipationPlan(
+        strategy=args.participation, cohort_size=args.cohort_size,
+        dropout_rate=args.dropout_rate, seed=args.participation_seed))
 
     anchors = jax.random.randint(jax.random.fold_in(key, 2),
                                  (args.anchors, args.seq), 0, cfg.vocab_size)
@@ -131,6 +163,7 @@ def main(argv=None):
     gbar = jnp.eye(args.anchors)
     server_m = engine.init_server_state(node_train)
 
+    part_state = part_mod.init_state(plan, k_nodes)
     streams = [iter(SyntheticLMStream(cfg.vocab_size, args.seq, args.batch,
                                       seed=100 + i)) for i in range(k_nodes)]
     up_bytes = lora_mod.param_bytes(trainable) + args.anchors ** 2 * 4
@@ -138,64 +171,108 @@ def main(argv=None):
     t0 = time.time()
     rnd_counter = [0]
 
-    def log_round(scalars, weights, xcka):
+    def cohort_of(metrics, r=None):
+        if "cohort_size" not in metrics:
+            return k_nodes
+        c = metrics["cohort_size"] if r is None else metrics["cohort_size"][r]
+        return max(int(round(float(c))), 1)
+
+    def round_task(metrics, r=None):
+        t = (metrics["scalars"]["task"] if r is None
+             else metrics["scalars"]["task"][r])
+        return float(jnp.sum(t)) / cohort_of(metrics, r)
+
+    def log_round(metrics):
         rnd = rnd_counter[0]
         rnd_counter[0] += 1
-        print(f"round {rnd}: task={float(scalars['task'].mean()):.4f} "
-              f"geo={float(scalars['geo'].mean()):.4f} "
-              f"xcka={float(xcka):.3f} "
-              f"w={[round(float(x), 3) for x in weights]} "
+        scalars, c = metrics["scalars"], cohort_of(metrics)
+        cohort = f" cohort={c}/{k_nodes}" if "cohort_size" in metrics else ""
+        print(f"round {rnd}: task={float(jnp.sum(scalars['task']))/c:.4f} "
+              f"geo={float(jnp.sum(scalars['geo']))/c:.4f} "
+              f"xcka={float(metrics['cross_node_cka']):.3f} "
+              f"w={[round(float(x), 3) for x in metrics['weights']]}"
+              f"{cohort} "
               f"uplink={up_bytes/1e6:.3f}MB vs full {full_bytes/1e6:.1f}MB "
               f"({100 * (1 - up_bytes / full_bytes):.2f}% saved) "
               f"[{time.time()-t0:.0f}s]", flush=True)
 
+    def stage_round():
+        step_batches = []
+        for _ in range(args.local_steps):
+            per_node = [next(s) for s in streams]
+            step_batches.append(jax.tree.map(
+                lambda *xs: jnp.stack(xs), *per_node))
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *step_batches)
+
+    # round state as a mutable list so the per-round and fused paths share
+    # it (the participation sampler state rides along when a plan is on)
+    state = [node_train, node_opt, node_keys, gbar, server_m]
+    if plan is not None:
+        state.append(part_state)
+    round_fn = engine.part_round_fn(plan) if plan else engine.round_fn
+
+    def run_one(batches):
+        out = round_fn(*state, (None,), (batches,))
+        state[:] = out[:-1]
+        return out[-1]
+
+    auto = str(args.block_size) == "auto"
+    block_size = 1 if auto else int(args.block_size)
     last_metrics = None
-    if args.rounds <= 0:
+    rounds_left = args.rounds
+    if rounds_left <= 0:
         return 0.0
-    if args.block_size <= 1:
+    if auto:
+        # measure ONCE at startup: round 0 pays compilation (warmup),
+        # round 1 times the async dispatch (host work) vs the full round,
+        # and M is picked so host work < 5% of round time under M-blocks
+        last_metrics = run_one(stage_round())
+        log_round(last_metrics)
+        rounds_left -= 1
+        if rounds_left > 0:
+            batches = stage_round()
+            t0m = time.perf_counter()
+            last_metrics = run_one(batches)
+            t_dispatch = time.perf_counter() - t0m
+            jax.block_until_ready(last_metrics)
+            t_round = time.perf_counter() - t0m
+            block_size = auto_block_size(t_dispatch, t_round)
+            print(f"[auto] dispatch={t_dispatch*1e3:.2f}ms "
+                  f"round={t_round*1e3:.2f}ms -> block size M={block_size}",
+                  flush=True)
+            log_round(last_metrics)
+            rounds_left -= 1
+    if rounds_left > 0 and block_size <= 1:
         # legacy per-round path: one dispatch and one host sync per round
-        for _ in range(args.rounds):
-            step_batches = []
-            for _ in range(args.local_steps):
-                per_node = [next(s) for s in streams]
-                step_batches.append(jax.tree.map(
-                    lambda *xs: jnp.stack(xs), *per_node))
-            batches = jax.tree.map(lambda *xs: jnp.stack(xs), *step_batches)
-            (node_train, node_opt, node_keys, gbar, server_m, metrics) = \
-                engine.round_fn(node_train, node_opt, node_keys, gbar,
-                                server_m, (None,), (batches,))
-            log_round(metrics["scalars"], metrics["weights"],
-                      metrics["cross_node_cka"])
-            last_metrics = metrics
-        final_task = float(last_metrics["scalars"]["task"].mean())
-    else:
+        for _ in range(rounds_left):
+            last_metrics = run_one(stage_round())
+            log_round(last_metrics)
+        final_task = round_task(last_metrics)
+    elif rounds_left > 0:
         # fused blocks: M rounds per donated dispatch, metrics streamed via
         # the io_callback tap, next block's batches staged while the current
         # block is in flight — no block_until_ready anywhere in the loop
-        def tap(metrics):
-            log_round(metrics["scalars"], metrics["weights"],
-                      metrics["cross_node_cka"])
-
-        stager = BlockStager(streams, args.local_steps, args.block_size)
-        state = (node_train, node_opt, node_keys, gbar, server_m)
-        rnd = 0
-        next_batches = stager.next_block(min(args.block_size, args.rounds))
-        while rnd < args.rounds:
-            m = min(args.block_size, args.rounds - rnd)
+        stager = BlockStager(streams, args.local_steps, block_size)
+        next_batches = stager.next_block(min(block_size, rounds_left))
+        while rounds_left > 0:
+            m = min(block_size, rounds_left)
             batches = next_batches
-            state, metrics = engine.run_block(
-                state, m, statics=(None,), batches=(batches,), tap=tap)
-            rnd += m
-            if rnd < args.rounds:       # double buffer: stage block N+1
+            new_state, last_metrics = engine.run_block(
+                tuple(state), m, statics=(None,), batches=(batches,),
+                tap=log_round, plan=plan)
+            state[:] = list(new_state)
+            rounds_left -= m
+            if rounds_left > 0:         # double buffer: stage block N+1
                 next_batches = stager.next_block(
-                    min(args.block_size, args.rounds - rnd))
-            last_metrics = metrics
+                    min(block_size, rounds_left))
         # the ONLY host sync of the whole run: materialise the last round's
         # task loss, then drain the tap callbacks (metric readback alone
         # does not wait for the io_callback thread — without the barrier
         # the last round's log lines can be lost at process exit)
-        final_task = float(last_metrics["scalars"]["task"][-1].mean())
+        final_task = round_task(last_metrics, r=-1)
         jax.effects_barrier()
+    else:
+        final_task = round_task(last_metrics)
     return final_task
 
 

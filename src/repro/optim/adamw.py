@@ -29,11 +29,20 @@ class AdamW:
     weight_decay: float = 0.0
     grad_clip: float = 0.0
     schedule: Optional[Callable] = None      # step -> multiplier
+    # global-ROUND schedule (federated drivers): multiplier keyed on the
+    # round counter the engine threads through the scan carry (the opt
+    # state gains a "round" entry, bumped once per federated round by the
+    # round executor), so warmup/cosine ACROSS fused round blocks works
+    # without re-jitting per round.  Composes with ``schedule``.
+    round_schedule: Optional[Callable] = None    # round -> multiplier
 
     def init(self, params) -> dict:
         zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
-        return {"m": _map(zeros, params), "v": _map(zeros, params),
-                "step": jnp.zeros((), jnp.int32)}
+        state = {"m": _map(zeros, params), "v": _map(zeros, params),
+                 "step": jnp.zeros((), jnp.int32)}
+        if self.round_schedule is not None:
+            state["round"] = jnp.zeros((), jnp.int32)
+        return state
 
     def update(self, grads, state, params):
         step = state["step"] + 1
@@ -51,6 +60,8 @@ class AdamW:
         mhat_scale = 1.0 / (1 - b1 ** step.astype(jnp.float32))
         vhat_scale = 1.0 / (1 - b2 ** step.astype(jnp.float32))
         lr = self.lr * (self.schedule(step) if self.schedule else 1.0)
+        if self.round_schedule is not None and "round" in state:
+            lr = lr * self.round_schedule(state["round"])
 
         def upd(p, mm, vv):
             u = (mm * mhat_scale) / (jnp.sqrt(vv * vhat_scale) + self.eps)
@@ -59,7 +70,10 @@ class AdamW:
             return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
 
         new_params = _map(upd, params, m, v)
-        return new_params, {"m": m, "v": v, "step": step}
+        new_state = {"m": m, "v": v, "step": step}
+        if "round" in state:
+            new_state["round"] = state["round"]
+        return new_params, new_state
 
 
 def warmup_cosine(warmup: int, total: int, floor: float = 0.1) -> Callable:

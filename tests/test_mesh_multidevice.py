@@ -48,6 +48,20 @@ h_blk = Federation(fed, TINY, mesh=mesh).run(block_size=2)
 for a, b in zip(h_ref, h_blk):
     np.testing.assert_allclose(a["weights"], b["weights"], atol=1e-5)
     np.testing.assert_allclose(a["task_loss"], b["task_loss"], atol=1e-5)
+
+# participation on the real mesh: every shard draws the replicated cohort
+# and slices its own rows (linearised pod x data shard index) — must match
+# the single-device engine's cohort AND metrics
+from repro.core.federation import ParticipationPlan
+plan = ParticipationPlan(strategy="uniform", cohort_size=6, seed=2)
+h_pr = Federation(fed, TINY).run_rounds(2, participation=plan)
+h_pm = Federation(fed, TINY, mesh=mesh).run_rounds(2, participation=plan)
+for a, b in zip(h_pr, h_pm):
+    assert a["participation"] == b["participation"], (a, b)
+    np.testing.assert_allclose(a["weights"], b["weights"], atol=1e-5)
+    np.testing.assert_allclose(a["task_loss"], b["task_loss"], atol=1e-5)
+    np.testing.assert_allclose(a["cross_node_cka"], b["cross_node_cka"],
+                               atol=1e-5)
 print("MESH8_OK")
 """
 
