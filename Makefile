@@ -1,4 +1,5 @@
-.PHONY: test bench bench-fed bench-fed-smoke train-smoke
+.PHONY: test bench bench-fed bench-fed-smoke bench-serve \
+	bench-serve-smoke train-smoke
 
 # tier-1 verification (the CI entrypoint)
 test:
@@ -20,6 +21,20 @@ bench-fed:
 bench-fed-smoke:
 	PYTHONPATH=src python -m benchmarks.federation_round --smoke
 	PYTHONPATH=src python -m benchmarks.check_smoke BENCH_federation.smoke.json
+
+# continuous-batching serving engine vs the legacy per-token loop
+# (writes BENCH_serve.json: tokens/s, TTFT percentiles, dispatch
+# structure, roofline prediction per model family)
+bench-serve:
+	PYTHONPATH=src python -m benchmarks.serve_bench
+
+# tiny-config serving smoke (the CI invocation; writes
+# BENCH_serve.smoke.json).  check_smoke fails the target if dispatches
+# or host syncs per token exceed 1/M, if a per-token sync creeps back
+# in, or if the engine diverges from the legacy-loop oracle.
+bench-serve-smoke:
+	PYTHONPATH=src python -m benchmarks.serve_bench --smoke
+	PYTHONPATH=src python -m benchmarks.check_smoke BENCH_serve.smoke.json
 
 train-smoke:
 	PYTHONPATH=src python -m repro.launch.train --tiny --rounds 2 \

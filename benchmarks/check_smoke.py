@@ -1,17 +1,18 @@
-"""CI guard over the federation smoke bench: fail if the dispatch
-structure regresses.
+"""CI guard over the smoke benches: fail if the dispatch structure
+regresses.
 
-The engine's whole value proposition is its dispatch structure — one
-compiled call per round, 1/M per round under fused blocks, unchanged by
-width bucketing and participation sampling.  Wall-clock on a shared CI
-runner is too noisy to gate on, but the dispatch counts are exact
-invariants, so this script asserts them over ``BENCH_federation.smoke.json``
-and exits non-zero on any regression (missing row, extra dispatches, a
-participation row that stopped fusing).
+The engines' whole value proposition is their dispatch structure — one
+compiled call per federation round (1/M under fused round blocks), one
+compiled call and ONE host readback per M-token decode block in the
+serving engine.  Wall-clock on a shared CI runner is too noisy to gate
+on, but the dispatch counts are exact invariants, so this script asserts
+them over the smoke JSON and exits non-zero on any regression (missing
+row, extra dispatches, a per-token host sync that crept back in).
 
-Run (after ``python -m benchmarks.federation_round --smoke``):
+The bench kind is auto-detected from the file's ``bench`` field:
 
     python -m benchmarks.check_smoke BENCH_federation.smoke.json
+    python -m benchmarks.check_smoke BENCH_serve.smoke.json
 """
 from __future__ import annotations
 
@@ -26,8 +27,40 @@ REQUIRED_ROWS = (
     "gram_backend_k2",
 )
 
+REQUIRED_SERVE_ROWS = ("dense_gqa", "ssm_mamba")
+
+
+def check_serve(data: dict) -> list:
+    """Serving smoke invariants: <= 1 dispatch (and <= 1 readback) per
+    M decode tokens, zero per-token host syncs, and bit-identity with
+    the legacy loop — all MEASURED by the bench, asserted here."""
+    errors = []
+    rows = {r["name"]: r for r in data.get("rows", ())}
+    for name in REQUIRED_SERVE_ROWS:
+        if name not in rows:
+            errors.append(f"missing serve smoke row {name!r}")
+    for r in data.get("rows", ()):
+        name, m = r["name"], r.get("block_steps", 1)
+        budget = round(1.0 / m, 4) + 1e-9
+        for field in ("dispatches_per_token", "host_syncs_per_token"):
+            if r.get(field, 0.0) > budget:
+                errors.append(
+                    f"{name}: {field}={r[field]} regressed (expected "
+                    f"<= {round(1.0 / m, 4)} for M={m} blocks)")
+        if r.get("per_token_extra_syncs", 0) != 0:
+            errors.append(f"{name}: {r['per_token_extra_syncs']} per-token "
+                          f"host syncs crept into the decode path")
+        if r.get("tokens_mismatched_vs_naive", 0) != 0:
+            errors.append(f"{name}: {r['tokens_mismatched_vs_naive']} "
+                          f"requests diverged from the legacy-loop oracle")
+        if r.get("speedup", 1.0) <= 0:
+            errors.append(f"{name}: nonsensical speedup {r['speedup']}")
+    return errors
+
 
 def check(data: dict) -> list:
+    if "serve" in data.get("bench", ""):
+        return check_serve(data)
     errors = []
     rows = {r["name"]: r for r in data.get("rows", ())}
     for name in REQUIRED_ROWS:

@@ -1,9 +1,22 @@
-"""Serving example: prefill a batch of requests, then batched decode with
-arch-appropriate caches (ring-buffer SWA, MLA latents, SSM states).
+"""Serving example: continuous batching by default, the legacy batched
+loop behind ``--legacy``.
+
+Default path drives ``repro.serve.ServeEngine``: a slot-stacked cache
+pool (ring-buffer SWA, MLA latents, SSM states — whatever the family
+needs), requests admitted mid-decode into free slots, and decode fused
+into M-step blocks (one jit dispatch + one host readback per M tokens
+per slot, sampling and stop accounting on device).
 
     PYTHONPATH=src python examples/serve_decode.py --arch falcon-mamba-7b
+    PYTHONPATH=src python examples/serve_decode.py --requests 12 --rate 8
+    PYTHONPATH=src python examples/serve_decode.py --legacy
+
+``--legacy`` runs the pre-engine loop on one fixed batch; its argmax is
+folded into the jitted decode step (the host never touches per-token
+logits) and the loop stays fully async until the final readback.
 """
 import argparse
+import statistics
 import time
 
 import jax
@@ -11,27 +24,22 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, reduced
 from repro.models import transformer as T
+from repro.serve import ServeConfig, ServeEngine, poisson_requests
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-32b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--new-tokens", type=int, default=32)
-    args = ap.parse_args()
-
-    cfg = reduced(get_config(args.arch))
-    key = jax.random.PRNGKey(0)
-    params = T.init_params(key, cfg)
+def run_legacy(cfg, params, key, args):
+    """One fixed batch, one token per jitted step — no admission, no
+    early stop, head-of-line by construction."""
     b, s = args.batch, args.prompt_len
-    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    # independent streams per input: never reuse one key across draws
+    k_tok, k_img, k_aud = (jax.random.fold_in(key, i) for i in range(3))
+    batch = {"tokens": jax.random.randint(k_tok, (b, s), 0, cfg.vocab_size)}
     if cfg.family == "vlm":
         batch["image_embeds"] = jax.random.normal(
-            key, (b, cfg.n_image_tokens, cfg.image_embed_dim))
+            k_img, (b, cfg.n_image_tokens, cfg.image_embed_dim))
     if cfg.family == "audio":
         batch["enc_embeds"] = jax.random.normal(
-            key, (b, cfg.encoder_seq_len, cfg.encoder_embed_dim))
+            k_aud, (b, cfg.encoder_seq_len, cfg.encoder_embed_dim))
 
     t0 = time.time()
     logits, cache = jax.jit(
@@ -41,20 +49,88 @@ def main():
     print(f"prefill {b}x{s} [{cfg.family}] in {time.time()-t0:.1f}s "
           f"(cache leaves: {len(jax.tree.leaves(cache))})")
 
-    decode = jax.jit(lambda p, c, t: T.decode_step(p, c, {"tokens": t}, cfg))
+    # argmax INSIDE the jitted step: the host schedules M async steps and
+    # reads tokens once at the end, instead of a logits readback per token
+    @jax.jit
+    def decode(p, c, t):
+        lg, c = T.decode_step(p, c, {"tokens": t}, cfg)
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32), c, lg
+
     tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
     out = [tok]
     t0 = time.time()
     for _ in range(args.new_tokens):
-        logits, cache = decode(params, cache, tok)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tok, cache, logits = decode(params, cache, tok)
         out.append(tok)
+    toks = jax.device_get(jnp.concatenate(out, axis=1))   # the one sync
     dt = (time.time() - t0) / args.new_tokens
-    toks = jnp.concatenate(out, axis=1)
-    print(f"decoded {args.new_tokens} tokens/seq @ {dt*1e3:.0f} ms/step "
+    print(f"decoded {args.new_tokens} tokens/seq @ {dt*1e3:.1f} ms/step "
           f"(greedy): {toks[0, :12].tolist()}...")
     assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
     print("ok: finite logits, cache len =", int(cache["len"]))
+
+
+def run_engine(cfg, params, args):
+    scfg = ServeConfig(n_slots=args.slots, cache_len=args.cache_len,
+                       block_steps=args.block_steps,
+                       max_new_tokens=args.new_tokens)
+    reqs = poisson_requests(args.requests, args.rate,
+                            prompt_len=args.prompt_len,
+                            vocab_size=cfg.vocab_size, seed=0)
+    if cfg.family in ("vlm", "audio"):    # per-request modality inputs
+        import dataclasses
+        name, shape = (("image_embeds",
+                        (cfg.n_image_tokens, cfg.image_embed_dim))
+                       if cfg.family == "vlm" else
+                       ("enc_embeds",
+                        (cfg.encoder_seq_len, cfg.encoder_embed_dim)))
+        reqs = [dataclasses.replace(r, extras=(
+            (name, jax.random.normal(jax.random.fold_in(
+                jax.random.PRNGKey(7), r.rid), shape)),))
+                for r in reqs]
+    eng = ServeEngine(params, cfg, scfg)
+    t0 = time.time()
+    recs = eng.serve(reqs, sync_ttft=args.rate > 0)
+    wall = time.time() - t0
+    toks = sum(len(r.tokens) for r in recs.values())
+    print(f"[{cfg.family}] served {len(reqs)} requests / {toks} tokens in "
+          f"{wall:.1f}s ({toks/wall:.0f} tok/s) over {args.slots} slots")
+    print(f"  dispatch structure: {eng.stats['block_dispatches']} block "
+          f"dispatches, {eng.stats['block_syncs']} readbacks for "
+          f"{eng.stats['block_tokens']} decoded tokens "
+          f"(M={args.block_steps})")
+    ttfts = [r.ttft_s for r in recs.values() if r.ttft_s is not None]
+    if args.rate > 0 and ttfts:
+        print(f"  ttft p50 {1e3*statistics.median(ttfts):.0f} ms over "
+              f"Poisson arrivals at {args.rate:g} req/s")
+    rid = min(recs)
+    print(f"  request {rid}: {recs[rid].tokens[:12]}...")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-32b")
+    ap.add_argument("--legacy", action="store_true",
+                    help="pre-engine fixed-batch loop")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="legacy loop batch size")
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate, req/s (0 = all at t=0)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--block-steps", type=int, default=8)
+    ap.add_argument("--cache-len", type=int, default=192)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    if args.legacy:
+        run_legacy(cfg, params, jax.random.fold_in(key, 1), args)
+    else:
+        run_engine(cfg, params, args)
 
 
 if __name__ == "__main__":

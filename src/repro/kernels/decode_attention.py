@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: single-token decode attention over the packed KV pool.
+
+Decode queries are one token per slot, so the flash kernel's (bq, dh)
+query panel degenerates to a single sublane at bq=1 — almost the whole
+MXU tile is padding.  This kernel instead packs the ``rep = H // KV``
+query heads that share a KV head into the SUBLANE dimension: the grid is
+``(S slots, KV heads, nkv KV blocks)`` and each cell contracts a
+(rep, dh) query panel against a (bkv, dh) KV panel, so the score tile is
+(rep, bkv) and no panel row is wasted on sequence padding.  The GQA
+grouping itself is the same zero-copy ``index_map`` trick as
+``flash_attention.py``: q is viewed as (S, KV, rep, dh) and the KV
+BlockSpec indexes head ``g`` of the un-repeated (S, C, KV, dh) pool — K/V
+are never materially repeated in HBM.
+
+Masking is positional, matching the serving cache layout exactly: every
+pool entry carries its absolute position (``kv_pos``; empty / padded
+slots hold a huge sentinel) and each slot carries its own current
+position ``q_pos``, so one rule covers causal validity, partially-filled
+slots, AND ring-buffer sliding windows:
+
+    ok = (kv_pos <= q_pos) & (q_pos - kv_pos < window)
+
+with ``window = cache_len`` for non-windowed caches (a linear buffer
+never holds a position older than cache_len).  The KV axis is innermost
+so the online-softmax running state (m, l, acc) lives in VMEM scratch
+across sequential KV steps, exactly like the flash kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _decode_kernel(qpos_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale: float, window: int,
+                   nkv: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # (rep, dh)
+    k = k_ref[0, :, 0].astype(jnp.float32)             # (bkv, dh)
+    s = q @ k.T                                        # (rep, bkv)
+    qp = qpos_ref[0]                                   # scalar int32
+    kp = kpos_ref[...]                                 # (1, bkv)
+    # one mask covers causality, empty (sentinel-pos) slots and the ring
+    # window; padded cache tails carry the sentinel so they fail kp <= qp
+    ok = (kp <= qp) & (qp - kp < window)
+    s = jnp.where(ok, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    # explicit mask on p: an all-masked block would otherwise exp(0)=1
+    # while m is still NEG_INF
+    p = jnp.where(ok, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr + p @ v_ref[0, :, 0].astype(jnp.float32)
+
+    @pl.when(ki == nkv - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: Array, k: Array, v: Array, q_pos: Array,
+                            kv_pos: Array, *, window: int = 0,
+                            scale: float = None, bkv: int = 128,
+                            interpret: bool = False) -> Array:
+    """q: (S, H, dh); k, v: (S, C, KV, dh); q_pos: (S,); kv_pos: (S, C).
+
+    H = KV * rep, with query head h attending to KV head h // rep (the
+    layout ``blockwise_attention`` and the serving cache pool share).
+    ``window`` is the sliding-window width; 0 means un-windowed (masked
+    internally as window = C, the most a linear buffer can hold).
+    Returns (S, H, dh).
+    """
+    s_slots, h, dh = q.shape
+    c, n_kv = k.shape[1], k.shape[2]
+    rep = h // n_kv
+    scale = scale if scale is not None else dh ** -0.5
+    window = window or c
+    bkv = min(bkv, c)
+    pad = (-c) % bkv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)),
+                         constant_values=jnp.iinfo(jnp.int32).max // 2)
+    nkv = (c + pad) // bkv
+    qg = q.reshape(s_slots, n_kv, rep, dh)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, window=window,
+                          nkv=nkv),
+        grid=(s_slots, n_kv, nkv),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, g, j: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, rep, dh), lambda b, g, j: (b, g, 0, 0)),
+            pl.BlockSpec((1, bkv, 1, dh), lambda b, g, j: (b, j, g, 0)),
+            pl.BlockSpec((1, bkv, 1, dh), lambda b, g, j: (b, j, g, 0)),
+            pl.BlockSpec((1, bkv), lambda b, g, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, dh), lambda b, g, j: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_slots, n_kv, rep, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos.astype(jnp.int32), qg, k, v, kv_pos.astype(jnp.int32))
+    return out.reshape(s_slots, h, dh)

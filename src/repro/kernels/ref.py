@@ -40,6 +40,29 @@ def flash_attention_ref(q: Array, k: Array, v: Array, *,
     return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def decode_attention_ref(q: Array, k: Array, v: Array, q_pos: Array,
+                         kv_pos: Array, *, window: int = 0,
+                         scale: float = None) -> Array:
+    """Masked single-token decode attention over a packed KV pool.
+    q: (S, H, dh); k, v: (S, C, KV, dh); q_pos: (S,); kv_pos: (S, C).
+    Query head h reads KV head h // (H // KV).  window=0 means un-windowed
+    (a linear buffer never holds positions older than C)."""
+    s_slots, h, dh = q.shape
+    c, n_kv = k.shape[1], k.shape[2]
+    rep = h // n_kv
+    window = window or c
+    scale = scale if scale is not None else dh ** -0.5
+    qg = q.astype(jnp.float32).reshape(s_slots, n_kv, rep, dh) * scale
+    sc = jnp.einsum("bgrd,bcgd->bgrc", qg, k.astype(jnp.float32))
+    qp = q_pos[:, None, None, None].astype(jnp.int32)
+    kp = kv_pos[:, None, None, :].astype(jnp.int32)
+    ok = (kp <= qp) & (qp - kp < window)
+    sc = jnp.where(ok, sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bgrc,bcgd->bgrd", p, v.astype(jnp.float32))
+    return out.reshape(s_slots, h, dh).astype(q.dtype)
+
+
 def selective_scan_ref(da: Array, dbx: Array, h0: Array) -> tuple:
     """Diagonal recurrence h_t = da_t * h_{t-1} + dbx_t.
     da, dbx: (B, S, C); h0: (B, C) -> (h_all (B, S, C), h_last (B, C))."""

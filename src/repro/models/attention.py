@@ -265,6 +265,57 @@ def gqa_decode(p: dict, x: Array, cache: dict, cfg: ModelConfig, *,
     return o, new_cache
 
 
+def gqa_decode_slots(p: dict, x: Array, cache: dict, cfg: ModelConfig, *,
+                     kind: str = "causal", window: int = 0,
+                     n_heads=None, n_kv=None, rt=None,
+                     backend: str = "reference",
+                     interpret: bool = False) -> Tuple[Array, dict]:
+    """One-token decode with PER-SLOT positions (the serving cache pool).
+
+    Unlike ``gqa_decode`` (one scalar ``len`` for the whole batch), every
+    slot carries its own position: x: (S, 1, d_model); cache: ``k``/``v``
+    (S, C, KV, dh), ``pos`` (S, C), ``lens`` (S,) int32.  Slot s writes its
+    new K/V at ring index ``lens[s] % C`` (windowed) or ``lens[s]``
+    (linear) and attends at query position ``lens[s]`` — slots at
+    different depths coexist in one batched call, which is what lets new
+    requests be admitted mid-decode without recompiling.
+
+    ``backend='pallas'`` routes the attention contraction to
+    ``kernels.decode_attention`` (interpret mode off-TPU); the default is
+    the blockwise jnp oracle.
+    """
+    h = n_heads or cfg.n_heads
+    kvh = n_kv or cfg.n_kv_heads
+    b = x.shape[0]
+    cache_len = cache["k"].shape[1]
+    lens = cache["lens"]                                  # (S,) int32
+    positions = lens[:, None]                             # (S, 1)
+    q, k, v = _qkv(p, x, x, cfg, h, kvh)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    slot = (lens % cache_len) if window > 0 \
+        else jnp.minimum(lens, cache_len - 1)
+    rows = jnp.arange(b, dtype=jnp.int32)
+    k_cache = cache["k"].at[rows, slot].set(k[:, 0])
+    v_cache = cache["v"].at[rows, slot].set(v[:, 0])
+    pos_cache = cache["pos"].at[rows, slot].set(lens)
+    if backend == "pallas":
+        from repro.kernels.decode_attention import decode_attention_pallas
+        out = decode_attention_pallas(q[:, 0], k_cache, v_cache, lens,
+                                      pos_cache, window=window,
+                                      interpret=interpret)[:, None]
+    else:
+        out = blockwise_attention(q, k_cache, v_cache, kind=kind,
+                                  window=window or cache_len,
+                                  q_positions=positions,
+                                  kv_positions=pos_cache, rt=rt)
+    new_cache = {"k": k_cache, "v": v_cache, "pos": pos_cache,
+                 "lens": lens + 1}
+    o = linear(out.reshape(b, 1, h * cfg.head_dim), p["wo"])
+    return o, new_cache
+
+
 def gqa_cross_decode(p: dict, x: Array, cross_cache: dict,
                      cfg: ModelConfig, *, n_heads=None, n_kv=None) -> Array:
     """Cross-attention during decode: kv precomputed from the encoder."""
@@ -410,6 +461,42 @@ def init_mla_cache(batch: int, cache_len: int, cfg: ModelConfig, dtype) -> dict:
         "k_rope": jnp.zeros((batch, cache_len, m.rope_head_dim), dtype),
         "len": jnp.zeros((), jnp.int32),
     }
+
+
+def mla_decode_slots(p: dict, x: Array, cache: dict, cfg: ModelConfig,
+                     rt=None) -> Tuple[Array, dict]:
+    """Absorbed MLA decode with PER-SLOT positions (serving cache pool).
+    cache: ``c_kv`` (S, C, kvr), ``k_rope`` (S, C, rd), ``lens`` (S,)."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    lens = cache["lens"]                                  # (S,)
+    positions = lens[:, None]                             # (S, 1)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_new, kr_new = _mla_ckv(p, x, cfg, positions)
+    rows = jnp.arange(b, dtype=jnp.int32)
+    c_cache = cache["c_kv"].at[rows, lens].set(c_new[:, 0])
+    kr_cache = cache["k_rope"].at[rows, lens].set(kr_new[:, 0])
+
+    w_ukv = p["w_ukv"]["w"].reshape(m.kv_lora_rank, h,
+                                    m.nope_head_dim + m.v_head_dim)
+    w_uk = w_ukv[..., : m.nope_head_dim]
+    w_uv = w_ukv[..., m.nope_head_dim:]
+    q_c = jnp.einsum("bthd,chd->bhc", q_nope, w_uk.astype(q_nope.dtype))
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    sc = (jnp.einsum("bhc,bsc->bhs", q_c, c_cache,
+                     preferred_element_type=jnp.float32)
+          + jnp.einsum("bthd,bsd->bhs", q_rope, kr_cache,
+                       preferred_element_type=jnp.float32)) * scale
+    s_len = c_cache.shape[1]
+    valid = jnp.arange(s_len)[None, None, :] <= lens[:, None, None]
+    sc = jnp.where(valid, sc, NEG_INF)
+    alpha = jax.nn.softmax(sc, axis=-1).astype(c_cache.dtype)
+    o_c = jnp.einsum("bhs,bsc->bhc", alpha, c_cache)
+    out = jnp.einsum("bhc,chd->bhd", o_c, w_uv.astype(o_c.dtype))
+    out = out.reshape(b, 1, h * m.v_head_dim)
+    new_cache = {"c_kv": c_cache, "k_rope": kr_cache, "lens": lens + 1}
+    return linear(out, p["wo"]), new_cache
 
 
 def mla_decode(p: dict, x: Array, cache: dict, cfg: ModelConfig,

@@ -685,5 +685,146 @@ def decode_step(params: dict, cache: dict, batch: dict, cfg: ModelConfig,
     return logits, new_cache
 
 
-__all__ = ["Runtime", "init_params", "forward", "decode_step", "prefill",
-           "init_cache"]
+def decode_step_slots(params: dict, cache: dict, batch: dict,
+                      cfg: ModelConfig, rt: Runtime = Runtime(), *,
+                      step_mask: Optional[Array] = None,
+                      attn_backend: str = "reference",
+                      attn_interpret: bool = False) -> Tuple[Array, dict]:
+    """One new token per SLOT, each slot at its own position (the serving
+    cache pool's decode path).
+
+    Unlike ``decode_step`` (one scalar ``cache['len']`` for the whole
+    batch), ``cache['len']`` is (S,) int32 — slot s reads/writes its
+    caches at position ``len[s]``, so freshly-admitted prompts and
+    long-running decodes share one batched call without recompiling.
+    ``step_mask`` (S,) bool freezes the position of inactive/stopped
+    slots (their cache writes land on a dead slot and are overwritten at
+    the next admission, so only ``len`` needs masking).
+    ``attn_backend='pallas'`` routes GQA slot attention to
+    ``kernels.decode_attention`` (interpret mode off-TPU).
+    """
+    fam = cfg.family
+    kind, window = _attn_kind(cfg, rt)
+    x = params["embed"][batch["tokens"]]
+    lens = cache["len"]                                  # (S,) int32
+    akw = dict(backend=attn_backend, interpret=attn_interpret)
+
+    if fam == "audio":
+        x = x + sinusoidal_positions(65536, cfg.d_model)[lens][:, None] \
+            .astype(x.dtype)
+
+        def body(h, layer):
+            bp, kc, vc, pc, ck, cv = layer
+            a = rms_norm(h, bp["ln1"]["scale"], cfg.norm_eps)
+            lc = {"k": kc, "v": vc, "pos": pc, "lens": lens}
+            a, nc = attn.gqa_decode_slots(bp["self_attn"], a, lc, cfg,
+                                          kind="causal", **akw)
+            h = h + a
+            c = rms_norm(h, bp["ln2"]["scale"], cfg.norm_eps)
+            c = attn.gqa_cross_decode(bp["cross_attn"], c,
+                                      {"k": ck, "v": cv}, cfg)
+            h = h + c
+            m = rms_norm(h, bp["ln3"]["scale"], cfg.norm_eps)
+            h = h + swiglu(bp["mlp"], m)
+            return h, (nc["k"], nc["v"], nc["pos"])
+        x, (nk, nv, np_) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"], cache["pos"],
+                      cache["cross_k"], cache["cross_v"]))
+        new_cache = dict(cache, k=nk, v=nv, pos=np_)
+    elif fam == "ssm":
+        def body(h, layer):
+            bp, hs, cs = layer
+            a = rms_norm(h, bp["ln"]["scale"], cfg.norm_eps)
+            y, ns = ssm_mod.mamba_decode(bp["mixer"], a, {"h": hs, "conv": cs},
+                                         cfg)
+            return h + y, (ns["h"], ns["conv"])
+        x, (nh, nc) = jax.lax.scan(body, x,
+                                   (params["blocks"], cache["h"], cache["conv"]))
+        new_cache = dict(cache, h=nh, conv=nc)
+    elif fam == "hybrid":
+        pat = cfg.rglru.block_pattern
+        w = cfg.rglru.local_window
+
+        def rec_step(h, bp, st):
+            a = rms_norm(h, bp["ln1"]["scale"], cfg.norm_eps)
+            y, ns = rglru_mod.rglru_decode(bp["mixer"], a, st, cfg)
+            h = h + y
+            m = rms_norm(h, bp["ln2"]["scale"], cfg.norm_eps)
+            return h + swiglu(bp["mlp"], m), ns
+
+        def att_step(h, bp, st):
+            a = rms_norm(h, bp["ln1"]["scale"], cfg.norm_eps)
+            lc = dict(st, lens=lens)
+            a, nc = attn.gqa_decode_slots(bp["attn"], a, lc, cfg,
+                                          kind="sliding", window=w, **akw)
+            h = h + a
+            m = rms_norm(h, bp["ln2"]["scale"], cfg.norm_eps)
+            nc.pop("lens")
+            return h + swiglu(bp["mlp"], m), nc
+
+        def group_body(h, layer):
+            gp, gc = layer
+            ncs = {}
+            for i, kind_i in enumerate(pat):
+                step = rec_step if kind_i == "recurrent" else att_step
+                h, ncs[f"b{i}"] = step(h, gp[f"b{i}"], gc[f"b{i}"])
+            return h, ncs
+        x, new_groups = jax.lax.scan(group_body, x,
+                                     (params["groups"], cache["groups"]))
+        new_tail = []
+        for i, bp in enumerate(params["tail"]):
+            step = rec_step if pat[i % len(pat)] == "recurrent" else att_step
+            x, nc = step(x, bp, cache["tail"][i])
+            new_tail.append(nc)
+        new_cache = dict(cache, groups=new_groups, tail=new_tail)
+    else:  # dense / vlm / moe
+        is_mla = cfg.mla is not None
+
+        def body(h, layer):
+            if is_mla:
+                bp, ck, kr = layer
+                lc = {"c_kv": ck, "k_rope": kr, "lens": lens}
+            else:
+                bp, kc, vc, pc = layer
+                lc = {"k": kc, "v": vc, "pos": pc, "lens": lens}
+            a = rms_norm(h, bp["ln1"]["scale"], cfg.norm_eps)
+            if is_mla:
+                a, nc = attn.mla_decode_slots(bp["attn"], a, lc, cfg, rt=rt)
+                out_c = (nc["c_kv"], nc["k_rope"])
+            else:
+                a, nc = attn.gqa_decode_slots(bp["attn"], a, lc, cfg,
+                                              kind=kind, window=window,
+                                              rt=rt, **akw)
+                out_c = (nc["k"], nc["v"], nc["pos"])
+            h = h + a
+            m = rms_norm(h, bp["ln2"]["scale"], cfg.norm_eps)
+            if "moe" in bp:
+                y, _ = moe_mod.moe_ffn(bp["moe"], m, cfg, mesh=rt.mesh,
+                                       ep_axis=rt.ep_axis,
+                                       batch_axes=rt.batch_axes)
+            else:
+                y = swiglu(bp["mlp"], m)
+            return h + y, out_c
+
+        if is_mla:
+            xs = (params["blocks"], cache["c_kv"], cache["k_rope"])
+            x, (nck, nkr) = jax.lax.scan(body, x, xs)
+            new_cache = dict(cache, c_kv=nck, k_rope=nkr)
+        else:
+            xs = (params["blocks"], cache["k"], cache["v"], cache["pos"])
+            x, (nk, nv, np_) = jax.lax.scan(body, x, xs)
+            new_cache = dict(cache, k=nk, v=nv, pos=np_)
+
+    new_lens = lens + 1 if step_mask is None \
+        else jnp.where(step_mask, lens + 1, lens)
+    new_cache["len"] = new_lens
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T.astype(x.dtype)
+    else:
+        logits = linear(x, params["lm_head"])
+    return logits, new_cache
+
+
+__all__ = ["Runtime", "init_params", "forward", "decode_step",
+           "decode_step_slots", "prefill", "init_cache"]

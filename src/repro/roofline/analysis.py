@@ -370,6 +370,73 @@ def roofline_from_compiled(compiled, *, n_chips: int,
     )
 
 
+def decode_cache_bytes_per_slot(cfg, cache_len: int) -> float:
+    """HBM bytes ONE slot's decode-state read costs per decode step.
+
+    Attention families re-read the slot's whole KV window every token;
+    recurrent families re-read a fixed-size state.  Matches the pool
+    layout in ``serve.pool`` / ``models.transformer.init_cache``:
+
+      GQA   : 2 * n_kv * head_dim * min(cache_len, window) per layer
+      MLA   : (kv_lora_rank + rope_head_dim) * cache_len per layer
+      SSM   : d_inner * (state_dim + conv_kernel) per layer
+      hybrid: RG-LRU state for recurrent layers, SWA ring for attention
+    """
+    b = _DTYPE_BYTES.get({"float32": "f32", "bfloat16": "bf16",
+                          "float16": "f16"}.get(cfg.dtype, cfg.dtype), 2)
+    d = cfg.d_model
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        d_in = s.expand * d
+        return cfg.n_layers * d_in * (s.state_dim + s.conv_kernel) * b
+    if cfg.family == "hybrid":
+        r = cfg.rglru
+        w = r.lru_width or d
+        pat = r.block_pattern
+        n_att = sum(1 for i in range(cfg.n_layers)
+                    if pat[i % len(pat)] == "attention")
+        n_rec = cfg.n_layers - n_att
+        ring = min(cache_len, r.local_window)
+        att = n_att * 2 * cfg.n_kv_heads * cfg.head_dim * ring
+        rec = n_rec * w * (1 + r.conv_kernel)
+        return (att + rec) * b
+    if cfg.mla is not None:
+        m = cfg.mla
+        return cfg.n_layers * (m.kv_lora_rank + m.rope_head_dim) \
+            * cache_len * b
+    window = min(cache_len, cfg.sliding_window) if cfg.sliding_window \
+        else cache_len
+    return cfg.n_layers * 2 * cfg.n_kv_heads * cfg.head_dim * window * b
+
+
+def decode_roofline(cfg, *, n_slots: int, cache_len: int,
+                    hw: dict = HW) -> dict:
+    """Memory-bound serving prediction for a batched decode step.
+
+    Decode at serving batch sizes is HBM-bandwidth bound: each step
+    streams every (active) weight once — amortised over the S slots —
+    plus each slot's decode state.  Returns predicted per-step seconds,
+    per-token milliseconds, and tokens/s at full occupancy; the serving
+    benchmark reports these next to measured throughput so the gap
+    (dispatch overhead, host scheduling, CPU-vs-TPU) is visible.
+    """
+    b = _DTYPE_BYTES.get({"float32": "f32", "bfloat16": "bf16",
+                          "float16": "f16"}.get(cfg.dtype, cfg.dtype), 2)
+    param_bytes = cfg.active_param_count * b
+    slot_bytes = decode_cache_bytes_per_slot(cfg, cache_len)
+    step_bytes = param_bytes + n_slots * slot_bytes
+    step_s = step_bytes / hw["hbm_bw"]
+    return {
+        "param_bytes": int(param_bytes),
+        "cache_bytes_per_slot": int(slot_bytes),
+        "step_bytes": int(step_bytes),
+        "bytes_per_token": int(step_bytes / max(n_slots, 1)),
+        "pred_step_s": step_s,
+        "pred_ms_per_token": 1e3 * step_s / max(n_slots, 1),
+        "pred_tokens_per_s": n_slots / step_s if step_s else float("inf"),
+    }
+
+
 def model_flops(cfg, shape, *, training: bool) -> float:
     """6*N*D (dense) or 6*N_active*D (MoE); D = tokens processed.  Decode
     processes global_batch tokens per step (one each)."""

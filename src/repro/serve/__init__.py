@@ -1,0 +1,18 @@
+"""Continuous-batching serving engine.
+
+Slot-stacked cache pool (:mod:`repro.serve.pool`), fused M-step decode
+blocks with on-device sampling (:mod:`repro.serve.engine`), and a tiny
+host-side FIFO scheduler (:mod:`repro.serve.scheduler`).  The legacy
+per-token loop survives as :func:`naive_generate` — the bit-identity
+oracle and the benchmark baseline.
+"""
+from repro.serve.engine import ServeConfig, ServeEngine, naive_generate
+from repro.serve.pool import gather_slot, init_pool_cache, scatter_slot
+from repro.serve.scheduler import (FifoScheduler, Request, RequestRecord,
+                                   poisson_requests)
+
+__all__ = [
+    "ServeConfig", "ServeEngine", "naive_generate",
+    "init_pool_cache", "scatter_slot", "gather_slot",
+    "FifoScheduler", "Request", "RequestRecord", "poisson_requests",
+]

@@ -1,0 +1,355 @@
+"""Continuous-batching decode engine: fused decode blocks over a donated
+slot-stacked cache pool.
+
+The legacy loop (``examples/serve_decode.py``) pays one jit dispatch plus
+a blocking host readback per decoded token and head-of-line blocks the
+whole batch on its slowest sequence.  This engine applies the round
+engine's idioms to serving:
+
+  - the S request slots live in ONE slot-stacked cache pool
+    (``serve.pool``) with per-slot positions, ``active`` / ``stopped``
+    masks, a per-slot token budget, and the last sampled token — all
+    device-resident and DONATED to the compiled step, so pool buffers
+    alias across blocks like round state aliases across rounds;
+  - ``M = block_steps`` decode steps are fused into one jitted
+    ``lax.scan`` (``_block_fn``): greedy/temperature sampling and
+    stop-token accounting run ON DEVICE in the carry, tokens accumulate
+    into an (M, S) device buffer, and the host pays exactly one dispatch
+    and one readback per M tokens-per-slot — the serving analogue of
+    ``RoundEngine.run_block``;
+  - new requests are admitted MID-DECODE: prefill runs as its own
+    compiled call (per prompt length), and the resulting single-request
+    cache is scattered into a free slot (``scatter_slot``) without
+    touching in-flight slots or recompiling anything;
+  - stopped slots keep riding the batched step with a frozen position
+    (``step_mask``): their cache writes land on a dead slot that the
+    next admission overwrites, so no gather/compact is needed.
+
+``naive_generate`` keeps the legacy per-token loop alive as the oracle
+and the benchmark baseline: one dispatch + one blocking argmax readback
+per token, batches run head-of-line until every member finishes.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.serve.pool import init_pool_cache, scatter_slot
+from repro.serve.scheduler import FifoScheduler, Request, RequestRecord
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Serving engine knobs.  ``max_new_tokens`` counts ALL generated
+    tokens including the one sampled from the prefill logits.
+    ``stop_token < 0`` disables early stopping.  ``temperature == 0`` is
+    greedy.  ``attn_backend``: 'reference' (blockwise jnp), 'pallas'
+    (``kernels.decode_attention``; interpret mode off-TPU), or 'auto'
+    (pallas on TPU, reference elsewhere)."""
+    n_slots: int = 8
+    cache_len: int = 128
+    block_steps: int = 8
+    max_new_tokens: int = 32
+    stop_token: int = -1
+    temperature: float = 0.0
+    seed: int = 0
+    attn_backend: str = "reference"
+
+
+def _resolve_backend(name: str):
+    """-> (backend, interpret) for decode_step_slots."""
+    on_tpu = jax.default_backend() == "tpu"
+    if name == "auto":
+        return ("pallas", False) if on_tpu else ("reference", False)
+    if name == "pallas":
+        return "pallas", not on_tpu
+    return "reference", False
+
+
+class ServeEngine:
+    """Continuous-batching engine for one model family.
+
+    Usage::
+
+        eng = ServeEngine(params, cfg, ServeConfig(n_slots=8))
+        records = eng.serve(requests)        # scheduler.Request list
+        records[rid].tokens                  # generated ids, stop incl.
+
+    ``eng.stats`` counts compiled-call dispatches and blocking host
+    readbacks by kind; the benchmark derives dispatches-per-token and
+    host-syncs-per-token from it instead of asserting constants.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, scfg: ServeConfig,
+                 rt: Optional[T.Runtime] = None):
+        if cfg.sliding_window:
+            eff = min(scfg.cache_len, cfg.sliding_window)
+            if eff < cfg.sliding_window:
+                raise ValueError(
+                    f"cache_len {scfg.cache_len} smaller than the sliding "
+                    f"window {cfg.sliding_window}: the pool ring would not "
+                    f"match prefill's ring packing")
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self.rt = rt or T.Runtime()
+        self._backend, self._interpret = _resolve_backend(scfg.attn_backend)
+        self.state = self._init_state()
+        self._block = jax.jit(self._block_impl, donate_argnums=(1,))
+        self._admit = jax.jit(self._admit_impl, donate_argnums=(1,))
+        self.stats = {"block_dispatches": 0, "block_syncs": 0,
+                      "block_tokens": 0, "admit_dispatches": 0,
+                      "request_reads": 0}
+
+    # ------------------------------------------------------------------
+    def _init_state(self) -> dict:
+        s = self.scfg.n_slots
+        return {
+            "cache": init_pool_cache(self.cfg, s, self.scfg.cache_len,
+                                     self.rt),
+            "active": jnp.zeros((s,), bool),
+            "stopped": jnp.ones((s,), bool),
+            "last_tok": jnp.zeros((s, 1), jnp.int32),
+            "n_emitted": jnp.zeros((s,), jnp.int32),
+            "max_new": jnp.full((s,), self.scfg.max_new_tokens, jnp.int32),
+            "key": jax.random.PRNGKey(self.scfg.seed),
+        }
+
+    def _sample(self, logits: Array, key: Array) -> Array:
+        """(S, V) float logits -> (S,) int32 next tokens, on device."""
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits.astype(jnp.float32) / self.scfg.temperature,
+            axis=-1).astype(jnp.int32)
+
+    # ------------------------------------------------------------------
+    def _admit_impl(self, params, state: dict, batch: dict, key: Array,
+                    max_new: Array, slot: Array):
+        """Prefill + first-token sampling + slot scatter, fused into ONE
+        compiled call per admission (compiled once per prompt length).
+        The first token lands in ``last_tok[slot]``; the host reads it
+        lazily — admission costs zero blocking syncs."""
+        logits, req_cache = T.prefill(params, batch, self.cfg, self.rt,
+                                      cache_len=self.scfg.cache_len)
+        first = self._sample(logits[:, -1, :], key)[0]
+        stop = self.scfg.stop_token
+        first_stopped = (max_new <= 1) | (first == stop if stop >= 0
+                                          else False)
+        cache = scatter_slot(state["cache"], req_cache, slot)
+        return dict(
+            state,
+            cache=cache,
+            active=state["active"].at[slot].set(True),
+            stopped=state["stopped"].at[slot].set(first_stopped),
+            last_tok=state["last_tok"].at[slot, 0].set(first),
+            n_emitted=state["n_emitted"].at[slot].set(1),
+            max_new=state["max_new"].at[slot].set(max_new),
+        )
+
+    def _block_impl(self, params, state: dict):
+        """M fused decode steps: sampling + stop accounting in the scan
+        carry; one (M, S) token buffer comes back per dispatch."""
+        stop = self.scfg.stop_token
+
+        def step(st, _):
+            running = st["active"] & ~st["stopped"]
+            logits, cache = T.decode_step_slots(
+                params, st["cache"], {"tokens": st["last_tok"]}, self.cfg,
+                self.rt, step_mask=running, attn_backend=self._backend,
+                attn_interpret=self._interpret)
+            key, sub = jax.random.split(st["key"])
+            tok = self._sample(logits[:, 0, :], sub)
+            tok = jnp.where(running, tok, st["last_tok"][:, 0])
+            n_emitted = st["n_emitted"] + running.astype(jnp.int32)
+            hit_stop = (tok == stop) if stop >= 0 else jnp.zeros_like(running)
+            exhausted = n_emitted >= st["max_new"]
+            stopped = st["stopped"] | (running & (hit_stop | exhausted))
+            st = dict(st, cache=cache, last_tok=tok[:, None],
+                      n_emitted=n_emitted, stopped=stopped, key=key)
+            return st, (tok, running)
+
+        state, (toks, emitted) = jax.lax.scan(
+            step, state, None, length=self.scfg.block_steps)
+        return state, toks, emitted
+
+    # ------------------------------------------------------------------
+    def _admit_request(self, req: Request, rec: RequestRecord,
+                       sync_ttft: bool, now) -> None:
+        scfg = self.scfg
+        max_new = req.max_new if req.max_new is not None \
+            else scfg.max_new_tokens
+        if not self.cfg.sliding_window and self.cfg.family != "ssm":
+            need = len(req.tokens) + max_new + 1
+            if need > scfg.cache_len:
+                raise ValueError(f"request {req.rid}: prompt+max_new "
+                                 f"{need} exceeds cache_len {scfg.cache_len}")
+        batch = {"tokens": jnp.asarray(req.tokens, jnp.int32)[None]}
+        for name, arr in req.extras:
+            batch[name] = jnp.asarray(arr)[None]
+        key = jax.random.fold_in(jax.random.PRNGKey(scfg.seed + 1), req.rid)
+        self.state = self._admit(self.params, self.state, batch, key,
+                                 jnp.asarray(max_new, jnp.int32),
+                                 jnp.asarray(rec.slot, jnp.int32))
+        self.stats["admit_dispatches"] += 1
+        first = self.state["last_tok"][rec.slot, 0]
+        rec.tokens.append(first)           # device scalar; resolved lazily
+        if sync_ttft:
+            first.block_until_ready()
+            self.stats["request_reads"] += 1
+            rec.first_token_s = now()
+
+    def serve(self, requests: List[Request], *,
+              sync_ttft: bool = False) -> Dict[int, RequestRecord]:
+        """Run a request stream to completion with continuous batching.
+
+        Admission happens between decode blocks: arrived requests fill
+        free slots (prefill + scatter), then one fused M-step block runs
+        and its (M, S) token buffer is read back — the only blocking
+        host sync in the decode path.  With ``sync_ttft`` the engine
+        additionally blocks on each request's first token to timestamp
+        TTFT (a per-REQUEST sync, used by the latency benchmark).
+        """
+        scfg = self.scfg
+        sched = FifoScheduler(requests, scfg.n_slots)
+        t0 = time.perf_counter()
+
+        def now():
+            return time.perf_counter() - t0
+
+        while not sched.done:
+            while sched.admissible(now()):
+                req, slot = sched.pop(now())
+                self._admit_request(req, sched.records[req.rid],
+                                    sync_ttft, now)
+                # a request that stops at its first token never decodes
+                if (req.max_new or scfg.max_new_tokens) <= 1:
+                    rec = sched.records[req.rid]
+                    if rec.first_token_s is None:
+                        rec.first_token_s = now()
+                    sched.release(slot, now())
+            busy = [s for s, rid in enumerate(sched.slot_rid)
+                    if rid is not None]
+            if not busy:
+                na = sched.next_arrival()
+                if na is None:
+                    break
+                wait = na - now()
+                if wait > 0:
+                    time.sleep(wait)
+                continue
+            self.state, toks, emitted = self._block(self.params, self.state)
+            self.stats["block_dispatches"] += 1
+            # ONE readback per block: tokens, emission mask, stop flags
+            toks_h, emitted_h, stopped_h = jax.device_get(
+                (toks, emitted, self.state["stopped"]))
+            self.stats["block_syncs"] += 1
+            t_block = now()
+            for s in busy:
+                rec = sched.records[sched.slot_rid[s]]
+                new = toks_h[emitted_h[:, s], s]
+                rec.tokens.extend(int(t) for t in new)
+                self.stats["block_tokens"] += int(emitted_h[:, s].sum())
+                if rec.first_token_s is None:
+                    rec.first_token_s = t_block
+                if stopped_h[s]:
+                    sched.release(s, t_block)
+        for rec in sched.records.values():      # resolve lazy first tokens
+            rec.tokens = [int(t) for t in rec.tokens]
+        return sched.records
+
+
+# ======================================================================
+# Module-level jits (cfg / rt / cache_len static) so repeated
+# naive_generate calls — warm-up then timed — share compilations.
+@partial(jax.jit, static_argnums=(2, 3, 4))
+def _naive_prefill(params, batch, cfg, rt, cache_len):
+    return T.prefill(params, batch, cfg, rt, cache_len=cache_len)
+
+
+@partial(jax.jit, static_argnums=(3, 4))
+def _naive_decode(params, cache, tok, cfg, rt):
+    return T.decode_step(params, cache, {"tokens": tok}, cfg, rt)
+
+
+def naive_generate(params, cfg: ModelConfig, requests: List[Request],
+                   scfg: ServeConfig, rt: Optional[T.Runtime] = None,
+                   stats: Optional[dict] = None) -> Dict[int, RequestRecord]:
+    """The legacy per-token loop, kept as oracle + benchmark baseline.
+
+    Requests run in arrival order in fixed batches of ``n_slots`` (all
+    prompts in a batch must share one length — the loop cannot pack);
+    every decoded token pays one jit dispatch plus one blocking host
+    readback (argmax + stop check on the host), and a batch runs until
+    EVERY member finishes (head-of-line blocking), exactly the structure
+    the continuous-batching engine removes.  Greedy only.
+    """
+    rt = rt or T.Runtime()
+    stats = stats if stats is not None else {}
+    stats.setdefault("decode_dispatches", 0)
+    stats.setdefault("host_syncs", 0)
+    stats.setdefault("decode_tokens", 0)
+    stats.setdefault("prefill_dispatches", 0)
+
+    def prefill_j(p, b):
+        return _naive_prefill(p, b, cfg, rt, scfg.cache_len)
+
+    def decode_j(p, c, t):
+        return _naive_decode(p, c, t, cfg, rt)
+
+    records = {r.rid: RequestRecord(request=r) for r in requests}
+    order = sorted(requests, key=lambda r: r.arrival_s)
+    t0 = time.perf_counter()
+    for i in range(0, len(order), scfg.n_slots):
+        group = order[i:i + scfg.n_slots]
+        plens = {len(r.tokens) for r in group}
+        assert len(plens) == 1, "naive baseline needs equal prompt lengths"
+        batch = {"tokens": jnp.asarray([r.tokens for r in group],
+                                       jnp.int32)}
+        logits, cache = prefill_j(params, batch)
+        stats["prefill_dispatches"] += 1
+        tok = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1),
+                         np.int32)                       # host sync
+        stats["host_syncs"] += 1
+        t_first = time.perf_counter() - t0
+        budgets = [r.max_new if r.max_new is not None
+                   else scfg.max_new_tokens for r in group]
+        outs = [[int(t)] for t in tok]
+        done = [budgets[j] <= 1 or
+                (scfg.stop_token >= 0 and int(tok[j]) == scfg.stop_token)
+                for j in range(len(group))]
+        for j, r in enumerate(group):
+            records[r.rid].first_token_s = t_first
+            records[r.rid].slot = j
+        # head-of-line: the whole batch keeps stepping until ALL are done
+        dev_tok = jnp.asarray(tok)[:, None]
+        while not all(done):
+            logits, cache = decode_j(params, cache, dev_tok)
+            stats["decode_dispatches"] += 1
+            tok = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1),
+                             np.int32)                   # per-token sync
+            stats["host_syncs"] += 1
+            for j in range(len(group)):
+                if done[j]:
+                    continue
+                outs[j].append(int(tok[j]))
+                stats["decode_tokens"] += 1
+                if ((scfg.stop_token >= 0 and int(tok[j]) == scfg.stop_token)
+                        or len(outs[j]) >= budgets[j]):
+                    done[j] = True
+            dev_tok = jnp.asarray(tok)[:, None]
+        t_done = time.perf_counter() - t0
+        for j, r in enumerate(group):
+            records[r.rid].tokens = outs[j]
+            records[r.rid].finished_s = t_done
+    return records

@@ -1,0 +1,84 @@
+"""Slot-stacked decode cache pool.
+
+The pool is the serving engine's analogue of the round engine's stacked
+node state: a fixed set of S request slots whose per-layer caches
+(ring-buffer SWA K/V, MLA latents, SSM / RG-LRU states — whatever
+``models.transformer.init_cache`` emits for the family) are stacked on
+the leading slot axis, with one per-slot position vector ``len`` (S,)
+instead of the single-batch scalar.  Because slot membership is a data
+index, not a shape, admitting a new request is a SCATTER of its
+prefilled single-request cache into a free slot — no recompilation, no
+restart of the in-flight batch.
+
+``scatter_slot`` routes every leaf by its batch-axis position: stacked
+per-layer leaves are (L, S, ...) (axis 1), hybrid tail blocks are
+unstacked (S, ...) (axis 0).  The prefilled request cache has the same
+structure with S=1, so each leaf lands with one
+``lax.dynamic_update_slice`` — cheap, donation-friendly, and
+jit-traceable with a traced slot index.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+Array = jax.Array
+
+
+def init_pool_cache(cfg: ModelConfig, n_slots: int, cache_len: int,
+                    rt: Optional[T.Runtime] = None) -> dict:
+    """A decode cache for S slots with PER-SLOT positions: identical to
+    ``init_cache(cfg, batch=S, cache_len)`` except ``len`` is (S,)."""
+    c = T.init_cache(cfg, n_slots, cache_len, rt or T.Runtime())
+    c["len"] = jnp.zeros((n_slots,), jnp.int32)
+    return c
+
+
+def _batch_axis(path) -> int:
+    """Hybrid tail blocks are per-layer dicts keyed under 'tail' with
+    leaves (S, ...); every other leaf is layer-stacked (L, S, ...)."""
+    for p in path:
+        if getattr(p, "key", None) == "tail":
+            return 0
+    return 1
+
+
+def scatter_slot(pool_cache: dict, req_cache: dict, slot: Array) -> dict:
+    """Write a prefilled single-request cache (batch axis of size 1) into
+    slot ``slot`` of the pool.  ``slot`` may be a traced int32 scalar."""
+    pool_no = dict(pool_cache)
+    req_no = dict(req_cache)
+    pool_len = pool_no.pop("len")
+    req_len = req_no.pop("len")
+
+    def put(path, pool_leaf, req_leaf):
+        ax = _batch_axis(path)
+        starts = [jnp.zeros((), jnp.int32)] * pool_leaf.ndim
+        starts[ax] = jnp.asarray(slot, jnp.int32)
+        return jax.lax.dynamic_update_slice(
+            pool_leaf, req_leaf.astype(pool_leaf.dtype), tuple(starts))
+
+    out = jax.tree_util.tree_map_with_path(put, pool_no, req_no)
+    out["len"] = pool_len.at[slot].set(
+        jnp.asarray(req_len, jnp.int32).reshape(()))
+    return out
+
+
+def gather_slot(pool_cache: dict, slot: Array) -> dict:
+    """Slice one slot back out as a single-request cache (test helper /
+    debugging; the inverse of ``scatter_slot``)."""
+    pool_no = dict(pool_cache)
+    pool_len = pool_no.pop("len")
+
+    def take(path, leaf):
+        ax = _batch_axis(path)
+        return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=ax)
+
+    out = jax.tree_util.tree_map_with_path(take, pool_no)
+    out["len"] = pool_len[slot]
+    return out

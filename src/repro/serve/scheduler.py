@@ -1,0 +1,105 @@
+"""Request stream + admission bookkeeping for the serving engine.
+
+The scheduler is deliberately host-side and tiny: arrival ordering, FIFO
+admission into free slots, and per-request accounting (arrival / first
+token / finish timestamps).  Everything latency-critical lives in the
+compiled engine; the scheduler only runs between decode blocks, so its
+cost is amortised over M tokens per slot.
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class Request:
+    """One generation request.  ``arrival_s`` is seconds after stream
+    start (0 = already queued); ``max_new`` overrides the engine default
+    (total generated tokens, including the prefill-sampled first one);
+    ``extras`` carries modality inputs (``image_embeds`` / ``enc_embeds``)
+    for VLM / audio families."""
+    rid: int
+    tokens: Tuple[int, ...]
+    arrival_s: float = 0.0
+    max_new: Optional[int] = None
+    extras: tuple = ()                 # tuple of (name, array) pairs
+
+
+@dataclass
+class RequestRecord:
+    """Per-request serving telemetry, filled in by the engine."""
+    request: Request
+    tokens: List[int] = field(default_factory=list)
+    admitted_s: Optional[float] = None
+    first_token_s: Optional[float] = None
+    finished_s: Optional[float] = None
+    slot: Optional[int] = None
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.request.arrival_s
+
+
+def poisson_requests(n: int, rate: float, *, prompt_len: int,
+                     vocab_size: int, seed: int = 0,
+                     max_new: Optional[int] = None) -> List[Request]:
+    """n requests with Poisson arrivals at ``rate`` req/s (rate <= 0 means
+    all arrive at t=0) and uniform random prompt tokens."""
+    rng = random.Random(seed)
+    t = 0.0
+    out = []
+    for i in range(n):
+        if rate > 0:
+            t += -math.log(1.0 - rng.random()) / rate
+        out.append(Request(
+            rid=i,
+            tokens=tuple(rng.randrange(vocab_size) for _ in range(prompt_len)),
+            arrival_s=t if rate > 0 else 0.0,
+            max_new=max_new))
+    return out
+
+
+class FifoScheduler:
+    """Arrival-ordered FIFO queue over a fixed slot set."""
+
+    def __init__(self, requests: List[Request], n_slots: int):
+        self.pending: List[Request] = sorted(requests,
+                                             key=lambda r: r.arrival_s)
+        self.records: Dict[int, RequestRecord] = {
+            r.rid: RequestRecord(request=r) for r in requests}
+        self.free_slots: List[int] = list(range(n_slots))
+        self.slot_rid: List[Optional[int]] = [None] * n_slots
+
+    def next_arrival(self) -> Optional[float]:
+        return self.pending[0].arrival_s if self.pending else None
+
+    def admissible(self, now_s: float) -> bool:
+        return bool(self.pending and self.free_slots
+                    and self.pending[0].arrival_s <= now_s)
+
+    def pop(self, now_s: float) -> Tuple[Request, int]:
+        """Claim (request, slot) for admission; caller must be
+        ``admissible``."""
+        req = self.pending.pop(0)
+        slot = self.free_slots.pop(0)
+        rec = self.records[req.rid]
+        rec.admitted_s = now_s
+        rec.slot = slot
+        self.slot_rid[slot] = req.rid
+        return req, slot
+
+    def release(self, slot: int, now_s: float) -> None:
+        rid = self.slot_rid[slot]
+        if rid is not None:
+            self.records[rid].finished_s = now_s
+        self.slot_rid[slot] = None
+        self.free_slots.append(slot)
+
+    @property
+    def done(self) -> bool:
+        return not self.pending and all(r is None for r in self.slot_rid)

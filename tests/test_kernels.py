@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.gram import cosine_gram_pallas
 from repro.kernels.lora_matmul import lora_matmul_pallas
@@ -93,6 +94,96 @@ def test_flash_attention_bf16():
     v = rnd(11, (4, 64, 32), jnp.bfloat16)
     got = flash_attention_pallas(q, k, v, bq=32, bkv=32, interpret=True)
     want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=3e-2)
+
+
+# ----------------------------------------------------------------------
+# decode attention: single-token queries against the packed KV pool
+SENTINEL = jnp.iinfo(jnp.int32).max // 2
+
+
+def _pool(i, s_slots, c, n_kv, rep, dh, lens, window=0, dtype=jnp.float32):
+    """Build a serving-style pool: slot j holds lens[j] tokens, laid out as
+    a ring of width c when window > 0 (entry for position p at slot p % c),
+    linear otherwise; empty entries carry the position sentinel."""
+    h = n_kv * rep
+    q = rnd(100 + i, (s_slots, h, dh), dtype)
+    k = rnd(101 + i, (s_slots, c, n_kv, dh), dtype)
+    v = rnd(102 + i, (s_slots, c, n_kv, dh), dtype)
+    lens = jnp.asarray(lens, jnp.int32)
+    slots = jnp.arange(c, dtype=jnp.int32)[None, :]
+    if window:
+        # ring layout: slot j holds positions p with p % c == slot index
+        # and lens[j] - c <= p < lens[j]
+        wrap = ((lens[:, None] - 1 - slots) // c) * c + slots
+        pos = jnp.where(wrap >= 0, wrap, SENTINEL)
+        pos = jnp.where(slots < jnp.minimum(lens[:, None], c), pos, SENTINEL)
+        pos = jnp.where(wrap < lens[:, None], pos, SENTINEL)
+    else:
+        pos = jnp.where(slots < lens[:, None], slots, SENTINEL)
+    return q, k, v, lens, pos
+
+
+@pytest.mark.parametrize("n_kv,rep", [(2, 1), (2, 4), (3, 2)])
+def test_decode_attention_gqa_grouping(n_kv, rep):
+    """GQA head grouping: query head h must read KV head h // rep."""
+    s_slots, c, dh = 3, 40, 32
+    q, k, v, lens, pos = _pool(0, s_slots, c, n_kv, rep, dh, [40, 17, 1])
+    got = decode_attention_pallas(q, k, v, lens, pos, bkv=16, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lens, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_decode_attention_ring_window():
+    """Ring-buffer SWA: positions wrap mod C and only the last ``window``
+    are visible; wrapped and unwrapped slots must agree with the oracle."""
+    s_slots, c, n_kv, rep, dh, w = 4, 24, 2, 2, 32, 24
+    # lens: partially filled, exactly full, wrapped once, wrapped many times
+    q, k, v, lens, pos = _pool(7, s_slots, c, n_kv, rep, dh,
+                               [9, 24, 31, 100], window=w)
+    got = decode_attention_pallas(q, k, v, lens, pos, window=w, bkv=8,
+                                  interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lens, pos, window=w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_decode_attention_padded_slots():
+    """Partially-filled slots: entries beyond each slot's length carry the
+    position sentinel and must get exactly zero attention weight."""
+    s_slots, c, n_kv, rep, dh = 3, 50, 2, 2, 32
+    q, k, v, lens, pos = _pool(13, s_slots, c, n_kv, rep, dh, [1, 13, 50])
+    # poison the invalid tail: if masking leaks, the output moves
+    bad = jnp.where((pos == SENTINEL)[..., None, None], 1e4, 1.0)
+    got = decode_attention_pallas(q, k * bad, v * bad, lens, pos, bkv=16,
+                                  interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lens, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_decode_attention_matches_blockwise_oracle():
+    """The kernel must agree with the model's decode path oracle
+    (attention.blockwise_attention with per-slot positions)."""
+    from repro.models.attention import blockwise_attention
+    # q_pos <= C-1, as in the engine: a linear buffer always has room for
+    # the current token, so the un-windowed bound (q_pos - kv_pos < C)
+    # never masks a live entry
+    s_slots, c, n_kv, rep, dh = 2, 33, 2, 3, 32
+    q, k, v, lens, pos = _pool(21, s_slots, c, n_kv, rep, dh, [20, 32])
+    got = decode_attention_pallas(q, k, v, lens, pos, bkv=16, interpret=True)
+    want = blockwise_attention(q[:, None].reshape(s_slots, 1, n_kv * rep, dh),
+                               k, v, kind="causal", window=c,
+                               q_positions=lens[:, None], kv_positions=pos)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want[:, 0]), atol=1e-5)
+
+
+def test_decode_attention_bf16():
+    s_slots, c, n_kv, rep, dh = 2, 32, 2, 2, 32
+    q, k, v, lens, pos = _pool(29, s_slots, c, n_kv, rep, dh, [32, 11],
+                               dtype=jnp.bfloat16)
+    got = decode_attention_pallas(q, k, v, lens, pos, bkv=16, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lens, pos)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), atol=3e-2)
 

@@ -1,0 +1,186 @@
+"""Continuous-batching engine tests.
+
+The load-bearing property is BIT-IDENTITY: a request decoded greedily
+through the slot-stacked engine — admitted mid-decode, sharing blocks
+with strangers, re-using a slot someone else stopped in — must produce
+exactly the tokens the legacy per-token loop produces for that request
+alone.  Dispatch structure (one compiled call + one readback per M-step
+block) is MEASURED from engine counters, not assumed.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import transformer as T
+from repro.serve import (Request, ServeConfig, ServeEngine, gather_slot,
+                         init_pool_cache, naive_generate, poisson_requests,
+                         scatter_slot)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny_cfg():
+    return get_config("fedmm-small").with_(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = _tiny_cfg()
+    return cfg, T.init_params(KEY, cfg)
+
+
+def _oracle(params, cfg, reqs, scfg, stats=None):
+    """Isolated legacy runs: batch=1 per request (no head-of-line
+    coupling), the ground truth the engine must reproduce exactly."""
+    one = dataclasses.replace(scfg, n_slots=1)
+    return naive_generate(params, cfg, reqs, one, stats=stats)
+
+
+def test_streamed_admission_matches_isolated_naive(tiny):
+    """Requests streaming into a smaller slot pool — admissions land
+    mid-decode, slots get re-used — decode bit-identically to isolated
+    per-request legacy loops."""
+    cfg, params = tiny
+    scfg = ServeConfig(n_slots=3, cache_len=64, block_steps=4,
+                       max_new_tokens=10)
+    reqs = poisson_requests(7, 0.0, prompt_len=8,
+                            vocab_size=cfg.vocab_size, seed=11)
+    # stagger arrivals so later requests are admitted between blocks,
+    # into slots vacated by finished requests
+    reqs = [dataclasses.replace(r, arrival_s=0.02 * i)
+            for i, r in enumerate(reqs)]
+    eng = ServeEngine(params, cfg, scfg)
+    recs = eng.serve(reqs)
+    want = _oracle(params, cfg, reqs, scfg)
+    for r in reqs:
+        assert recs[r.rid].tokens == want[r.rid].tokens, r.rid
+    assert all(len(recs[r.rid].tokens) == 10 for r in reqs)
+    # more requests than slots forces at least one slot re-use
+    assert len({recs[r.rid].slot for r in reqs}) <= scfg.n_slots
+
+
+def test_stop_token_truncates_and_frees_slot(tiny):
+    """A stop token truncates exactly where the legacy loop stops, and
+    the freed slot is handed to a queued request."""
+    cfg, params = tiny
+    base = ServeConfig(n_slots=2, cache_len=64, block_steps=4,
+                       max_new_tokens=12)
+    reqs = poisson_requests(5, 0.0, prompt_len=6,
+                            vocab_size=cfg.vocab_size, seed=5)
+    free = ServeEngine(params, cfg, base).serve(reqs)
+    # pick a token some request emits mid-stream as the stop token
+    stop = next(free[r.rid].tokens[3] for r in reqs
+                if len(set(free[r.rid].tokens)) > 1)
+    scfg = dataclasses.replace(base, stop_token=int(stop))
+    recs = ServeEngine(params, cfg, scfg).serve(reqs)
+    want = _oracle(params, cfg, reqs, scfg)
+    truncated = 0
+    for r in reqs:
+        got = recs[r.rid].tokens
+        assert got == want[r.rid].tokens, r.rid
+        if int(stop) in got:
+            assert got.index(int(stop)) == len(got) - 1  # nothing after
+            truncated += len(got) < 12
+    assert truncated >= 1, "stop token never fired; test is vacuous"
+
+
+def test_per_slot_budgets(tiny):
+    """Per-request max_new overrides run side by side in one pool."""
+    cfg, params = tiny
+    scfg = ServeConfig(n_slots=4, cache_len=64, block_steps=4,
+                       max_new_tokens=9)
+    reqs = poisson_requests(4, 0.0, prompt_len=8,
+                            vocab_size=cfg.vocab_size, seed=2)
+    reqs = [dataclasses.replace(r, max_new=m)
+            for r, m in zip(reqs, (1, 3, 9, None))]
+    recs = ServeEngine(params, cfg, scfg).serve(reqs)
+    want = _oracle(params, cfg, reqs, scfg)
+    assert [len(recs[r.rid].tokens) for r in reqs] == [1, 3, 9, 9]
+    for r in reqs:
+        assert recs[r.rid].tokens == want[r.rid].tokens, r.rid
+
+
+def test_block_dispatch_structure(tiny):
+    """One compiled call and ONE host readback per M-step block — the
+    counters are measured by the engine, not asserted into existence."""
+    cfg, params = tiny
+    scfg = ServeConfig(n_slots=4, cache_len=64, block_steps=8,
+                       max_new_tokens=17)
+    reqs = poisson_requests(4, 0.0, prompt_len=8,
+                            vocab_size=cfg.vocab_size, seed=7)
+    eng = ServeEngine(params, cfg, scfg)
+    eng.serve(reqs)
+    st = eng.stats
+    assert st["block_syncs"] == st["block_dispatches"]
+    # 16 decode steps per slot (first token comes from prefill) -> 2 blocks
+    assert st["block_dispatches"] == 2
+    assert st["block_tokens"] == 4 * 16
+    # >= M decoded tokens amortise each dispatch and each readback
+    assert st["block_tokens"] / st["block_dispatches"] >= scfg.block_steps
+    assert st["request_reads"] == 0  # no per-token (nor per-request) syncs
+    # the legacy loop pays per token
+    nstats = {}
+    naive_generate(params, cfg, reqs, scfg, stats=nstats)
+    assert nstats["decode_dispatches"] == 16
+    assert nstats["host_syncs"] == 17  # prefill argmax + one per step
+
+
+@pytest.mark.parametrize("arch", ["mistral-nemo-12b", "deepseek-v2-236b",
+                                  "recurrentgemma-9b", "falcon-mamba-7b"])
+def test_families_match_naive(arch):
+    """Sliding-window rings, MLA latents, RG-LRU + SWA hybrids and SSM
+    states all stream through the same pool bit-identically."""
+    cfg = reduced(get_config(arch))
+    if cfg.moe is not None:
+        cfg = cfg.with_(moe=dataclasses.replace(cfg.moe,
+                                                capacity_factor=8.0))
+    params = T.init_params(KEY, cfg)
+    scfg = ServeConfig(n_slots=3, cache_len=64, block_steps=4,
+                       max_new_tokens=8)
+    reqs = poisson_requests(5, 0.0, prompt_len=8,
+                            vocab_size=cfg.vocab_size, seed=3)
+    recs = ServeEngine(params, cfg, scfg).serve(reqs)
+    want = _oracle(params, cfg, reqs, scfg)
+    for r in reqs:
+        assert recs[r.rid].tokens == want[r.rid].tokens, (arch, r.rid)
+
+
+def test_pallas_decode_backend_matches_reference(tiny):
+    """attn_backend='pallas' (interpret mode on CPU) routes slot decode
+    through kernels.decode_attention and produces identical tokens."""
+    cfg, params = tiny
+    reqs = poisson_requests(3, 0.0, prompt_len=8,
+                            vocab_size=cfg.vocab_size, seed=1)
+    outs = {}
+    for backend in ("reference", "pallas"):
+        scfg = ServeConfig(n_slots=3, cache_len=64, block_steps=2,
+                           max_new_tokens=6, attn_backend=backend)
+        recs = ServeEngine(params, cfg, scfg).serve(reqs)
+        outs[backend] = {r.rid: recs[r.rid].tokens for r in reqs}
+    assert outs["reference"] == outs["pallas"]
+
+
+def test_scatter_gather_roundtrip(tiny):
+    """scatter_slot routes every cache leaf (stacked layers AND hybrid
+    tails) to the right slot; gather_slot inverts it."""
+    cfg, params = tiny
+    pool = init_pool_cache(cfg, 4, 32, T.Runtime())
+    batch = {"tokens": jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size)}
+    _, req = T.prefill(params, batch, cfg, T.Runtime(), cache_len=32)
+    pool2 = scatter_slot(pool, req, jnp.asarray(2, jnp.int32))
+    back = gather_slot(pool2, jnp.asarray(2, jnp.int32))
+    flat_a = jax.tree_util.tree_leaves_with_path(req)
+    flat_b = dict(jax.tree_util.tree_leaves_with_path(back))
+    for path, leaf in flat_a:
+        got = flat_b[path]
+        assert got.shape == jnp.shape(leaf), path
+        assert bool(jnp.array_equal(jnp.asarray(leaf, jnp.float32),
+                                    jnp.asarray(got, jnp.float32))), path
+    # untouched slots stayed zero
+    other = gather_slot(pool2, jnp.asarray(0, jnp.int32))
+    assert int(other["len"]) == 0
