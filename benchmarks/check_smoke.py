@@ -24,10 +24,17 @@ REQUIRED_ROWS = (
     "mixed_width_bucketed_k2",
     "fused_rounds_m2",
     "sampled_cohort_c1_of_k2",
+    "async_lagged_k2",
+    "quarantine_1_poisoned",
     "gram_backend_k2",
 )
 
 REQUIRED_SERVE_ROWS = ("dense_gqa", "ssm_mamba")
+
+
+class SkipCheck(Exception):
+    """The file is not a smoke bench this script knows how to gate —
+    report WHY and exit 0 instead of tracebacking on a KeyError."""
 
 
 def check_serve(data: dict) -> list:
@@ -59,14 +66,26 @@ def check_serve(data: dict) -> list:
 
 
 def check(data: dict) -> list:
-    if "serve" in data.get("bench", ""):
+    bench = data.get("bench")
+    if bench is None:
+        raise SkipCheck("no 'bench' field — not a smoke bench JSON "
+                        "written by benchmarks/*.py")
+    if "serve" in bench:
         return check_serve(data)
+    if "federation" not in bench:
+        raise SkipCheck(f"unknown bench kind {bench!r} (this script "
+                        f"gates 'federation*' and '*serve*' benches)")
     errors = []
-    rows = {r["name"]: r for r in data.get("rows", ())}
+    named = [r for r in data.get("rows", ()) if isinstance(r, dict)
+             and "name" in r]
+    rows = {r["name"]: r for r in named}
     for name in REQUIRED_ROWS:
         if name not in rows:
             errors.append(f"missing smoke row {name!r}")
-    for r in data.get("rows", ()):
+    for i, r in enumerate(data.get("rows", ())):
+        if not (isinstance(r, dict) and "name" in r):
+            print(f"skipping rows[{i}]: no 'name' field, not a bench row")
+            continue
         name = r["name"]
         if r.get("engine_dispatches_per_round", 1) != 1:
             errors.append(
@@ -91,6 +110,22 @@ def check(data: dict) -> list:
         if "cost_vs_full" in r and r["cost_vs_full"] <= 0:
             errors.append(f"{name}: nonsensical cost_vs_full "
                           f"{r['cost_vs_full']}")
+        if r.get("strategy") == "async":
+            # robustness invariants, MEASURED by the bench: the global
+            # state must stay finite even under a poisoned node, and the
+            # device quarantine counters must agree exactly with the
+            # bench's independent host-side count of poisoned report
+            # attempts (a guard that misses or double-counts trips this)
+            if not r.get("finite_global", False):
+                errors.append(f"{name}: global state went non-finite "
+                              f"under the async run")
+            if r.get("quarantined") != r.get("expected_quarantined"):
+                errors.append(
+                    f"{name}: quarantine counters {r.get('quarantined')} "
+                    f"!= host-side expected "
+                    f"{r.get('expected_quarantined')}")
+            if r.get("poison_nodes") and not any(r.get("quarantined", ())):
+                errors.append(f"{name}: poisoned run quarantined nothing")
     return errors
 
 
@@ -98,7 +133,15 @@ def main() -> int:
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_federation.smoke.json"
     with open(path) as fh:
         data = json.load(fh)
-    errors = check(data)
+    if not isinstance(data, dict):
+        print(f"{path}: SKIP — top level is {type(data).__name__}, "
+              f"not a bench result object")
+        return 0
+    try:
+        errors = check(data)
+    except SkipCheck as e:
+        print(f"{path}: SKIP — {e}")
+        return 0
     for e in errors:
         print(f"SMOKE BENCH REGRESSION: {e}", file=sys.stderr)
     if not errors:

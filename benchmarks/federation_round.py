@@ -30,12 +30,23 @@ Gram against the Pallas kernel (interpret mode on CPU — the
 dispatch-correctness datapoint; the performance target is TPU) on the
 server step.
 
+``async_lagged_k{K}`` / ``quarantine_1_poisoned`` rows measure the
+buffered staleness-aware protocol through the fused blocks: rounds/sec vs
+the synchronous baseline, the staleness histogram of delivered reports,
+the device quarantine counters against an independent host-side count of
+poisoned report attempts, a finite-globals check, and the final
+cross-node CKA convergence proxy — all still at one measured dispatch per
+M-round block.
+
 Run: PYTHONPATH=src python -m benchmarks.federation_round [--quick|--smoke]
+(``--only SUBSTR`` re-runs just the matching rows and merges them into
+the existing JSON.)
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 from repro.configs import get_config
@@ -199,7 +210,8 @@ def bench_fused_rounds(name: str, k: int, modalities, reps: int,
     # dispatch counters wrap the already-compiled functions AFTER warmup,
     # so the timed reps below measure the real dispatch structure
     pr_calls = _count_calls(per_round.engine, attr="round_fn")
-    fu_calls = _count_calls(fused.engine._block_cache, key=(m, False, None))
+    fu_calls = _count_calls(fused.engine._block_cache,
+                            key=(m, False, None, False, 0))
     best_r = best_f = float("inf")
     # small M means short timed spans; take more reps so a transient
     # contention burst cannot bias a whole variant
@@ -262,7 +274,7 @@ def bench_participation(name: str, k: int, modalities, reps: int, m: int,
     # measure the dispatch structure (counter on the compiled block fn,
     # installed after warmup): participation must not add dispatches
     samp_calls = _count_calls(samp.engine._block_cache,
-                              key=(m, False, plan))
+                              key=(m, False, plan, False, 0))
     best_full = best_samp = float("inf")
     reps = max(reps, 32 // m)
     for _ in range(reps):
@@ -307,6 +319,99 @@ def bench_participation(name: str, k: int, modalities, reps: int, m: int,
     return row
 
 
+def bench_async(name: str, k: int, modalities, reps: int, m: int,
+                plan) -> dict:
+    """Asynchronous buffered federation through the fused-block executor:
+    nodes report after a sampled lag (and may crash, rejoin, or be
+    poisoned), the server staleness-weights whatever landed this round —
+    still ONE donated dispatch per M-round block (measured).  Reports
+    rounds/sec, the staleness histogram of delivered reports, the
+    per-node quarantine counters against an independent host-side count
+    of poisoned report attempts, a finite-globals check, and the final
+    cross-node CKA against a synchronous full-participation baseline
+    (the convergence proxy CI guards for sign flips)."""
+    import numpy as np
+    import jax
+
+    fedcfg = _light_fedcfg(k, modalities)
+    sync = Federation(fedcfg, TINY)
+    asyn = Federation(fedcfg, TINY)
+    sync_recs = sync.run_rounds(m, block_size=m)       # warmup + compile
+    all_recs = list(asyn.run_rounds(m, block_size=m, participation=plan))
+    asy_calls = _count_calls(asyn.engine._block_cache,
+                             key=(m, False, plan, False, 0))
+    best_sync = best_async = float("inf")
+    reps = max(reps, 32 // m)
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        sync_recs = sync.run_rounds(m, block_size=m)
+        best_sync = min(best_sync, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        recs = asyn.run_rounds(m, block_size=m, participation=plan)
+        best_async = min(best_async, time.perf_counter() - t0)
+        all_recs += recs
+    sync_ms = best_sync / m * 1e3
+    async_ms = best_async / m * 1e3
+    timed_rounds = reps * m
+    # staleness histogram over DELIVERED reports (lag in rounds)
+    hist = {}
+    for r in all_recs:
+        for lag, d in zip(r["staleness"], r["delivered"]):
+            if d > 0:
+                hist[int(lag)] = hist.get(int(lag), 0) + 1
+    n_del = sum(hist.values())
+    mean_stale = (sum(l * c for l, c in hist.items()) / n_del
+                  if n_del else 0.0)
+    # the device quarantine counters vs an INDEPENDENT host-side count:
+    # a poisoned node must be quarantined on every round it starts a
+    # report, so the two columns must agree exactly (CI checks this)
+    quarantined = [int(round(x)) for x in all_recs[-1]["quarantined"]]
+    expected_q = [0] * k
+    for r in all_recs:
+        for i in plan.poison_nodes:
+            expected_q[i] += int(round(r["participation"][i]))
+    finite = bool(np.isfinite(np.asarray(asyn.gbar)).all())
+    for i in range(k):
+        for leaf in jax.tree.leaves(asyn.node_params(i)):
+            if leaf is not None:
+                finite &= bool(np.isfinite(np.asarray(leaf)).all())
+
+    row = {
+        "name": name,
+        "k_nodes": k,
+        "modalities": list(modalities),
+        "local_steps": LOCAL_STEPS,
+        "block_rounds": m,
+        "strategy": "async",
+        "lag_dist": plan.lag_dist,
+        "max_lag": plan.max_lag,
+        "crash_rate": plan.crash_rate,
+        "poison_nodes": list(plan.poison_nodes),
+        "sync_ms_per_round": round(sync_ms, 2),
+        "async_ms_per_round": round(async_ms, 2),
+        "rounds_per_sec": round(1e3 / async_ms, 2),
+        "cost_vs_sync": round(async_ms / sync_ms, 2),
+        # async must not change the dispatch structure: still one donated
+        # dispatch per M-round block — MEASURED over the timed reps
+        "dispatches_per_round": round(asy_calls["n"] / timed_rounds, 4),
+        "host_syncs_per_round": round(1.0 / m, 4),
+        "staleness_hist": {str(l): hist[l] for l in sorted(hist)},
+        "mean_staleness": round(mean_stale, 3),
+        "n_delivered": n_del,
+        "quarantined": quarantined,
+        "expected_quarantined": expected_q,
+        "finite_global": finite,
+        "async_final_cka": round(float(all_recs[-1]["cross_node_cka"]), 4),
+        "sync_final_cka": round(float(sync_recs[-1]["cross_node_cka"]), 4),
+    }
+    print(f"{name} K={k} M={m} {plan.lag_dist}: sync={sync_ms:.1f}ms "
+          f"async={async_ms:.1f}ms/round ({row['rounds_per_sec']} r/s, "
+          f"measured dispatches/round {row['dispatches_per_round']}) "
+          f"stale-hist={row['staleness_hist']} "
+          f"quarantined={quarantined} finite={finite}", flush=True)
+    return row
+
+
 def bench_gram_backend(name: str, k: int, modalities, rounds: int) -> dict:
     """Server-step Gram backend: reference jnp vs the Pallas kernel (MXU
     path on TPU; interpret mode here, so the CPU number is a correctness /
@@ -337,6 +442,10 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-config CI smoke: K=2, 1 timed round, "
                          "separate output file")
+    ap.add_argument("--only", default=None,
+                    help="substring filter: run only the matching rows "
+                         "and MERGE them into an existing output JSON "
+                         "(other rows are kept as-is)")
     ap.add_argument("--out", default=None)
     args, _ = ap.parse_known_args()
     out = args.out or ("BENCH_federation.smoke.json" if args.smoke
@@ -354,6 +463,15 @@ def main() -> None:
         # the >= 1-slot-per-bucket allocation
         part_rows = [("sampled_cohort_c1_of_k2", 2, ("tabular",), 2,
                       ParticipationPlan(strategy="uniform", cohort_size=1))]
+        async_rows = [
+            ("async_lagged_k2", 2, fused_modalities, 2,
+             ParticipationPlan(strategy="async", lag_dist="geometric",
+                               lag_p=0.5, max_lag=2, crash_rate=0.1,
+                               rejoin_rate=0.5, seed=11)),
+            ("quarantine_1_poisoned", 2, fused_modalities, 2,
+             ParticipationPlan(strategy="async", lag_dist="fixed", lag=0,
+                               poison_nodes=(1,), seed=13)),
+        ]
     else:
         ks = (4, 8) if args.quick else (4, 8, 16)
         rounds = 2 if args.quick else 3
@@ -375,23 +493,59 @@ def main() -> None:
             ("dropout_p25", 8, fused_modalities, 4,
              ParticipationPlan(strategy="dropout", dropout_rate=0.25)),
         ]
-    rows = [bench_cfg(f"round_latency_k{k}", k, sweep_modalities, rounds)
-            for k in ks]
-    rows.append(bench_mixed_bucketed(
-        f"mixed_width_bucketed_k{mixed_k}", mixed_k, mixed, rounds))
-    rows += [bench_fused_rounds(f"fused_rounds_m{m}", mixed_k,
-                                fused_modalities, rounds, m)
-             for m in fused_ms]
-    rows += [bench_participation(name, k, mods, rounds, m, plan)
-             for name, k, mods, m, plan in part_rows]
-    rows.append(bench_gram_backend(f"gram_backend_k{gram_k}", gram_k,
+        async_rows = [
+            ("async_lagged_k8", 8, fused_modalities, 4,
+             ParticipationPlan(strategy="async", lag_dist="geometric",
+                               lag_p=0.5, max_lag=4, crash_rate=0.1,
+                               rejoin_rate=0.5, seed=11)),
+            ("quarantine_1_poisoned", 8, fused_modalities, 4,
+             ParticipationPlan(strategy="async", lag_dist="fixed", lag=1,
+                               poison_nodes=(1,), seed=13)),
+        ]
+    jobs = [(f"round_latency_k{k}",
+             lambda k=k: bench_cfg(f"round_latency_k{k}", k,
                                    sweep_modalities, rounds))
+            for k in ks]
+    jobs.append((f"mixed_width_bucketed_k{mixed_k}",
+                 lambda: bench_mixed_bucketed(
+                     f"mixed_width_bucketed_k{mixed_k}", mixed_k, mixed,
+                     rounds)))
+    jobs += [(f"fused_rounds_m{m}",
+              lambda m=m: bench_fused_rounds(f"fused_rounds_m{m}", mixed_k,
+                                             fused_modalities, rounds, m))
+             for m in fused_ms]
+    jobs += [(name, lambda a=(name, k, mods, rounds, m, plan):
+              bench_participation(*a))
+             for name, k, mods, m, plan in part_rows]
+    jobs += [(name, lambda a=(name, k, mods, rounds, m, plan):
+              bench_async(*a))
+             for name, k, mods, m, plan in async_rows]
+    jobs.append((f"gram_backend_k{gram_k}",
+                 lambda: bench_gram_backend(f"gram_backend_k{gram_k}",
+                                            gram_k, sweep_modalities,
+                                            rounds)))
+    if args.only:
+        jobs = [(n, fn) for n, fn in jobs if args.only in n]
+        if not jobs:
+            print(f"--only {args.only!r} matches no bench rows")
+            return
+    rows = [fn() for _, fn in jobs]
     results = {
         "bench": "federation_round_latency",
         "model": "fedmm-small (reduced: 2L/64d)",
         "backend": "cpu",
         "rows": rows,
     }
+    if args.only and os.path.exists(out):
+        # merge mode: replace matching rows in the existing JSON in place,
+        # append rows it didn't have, keep everything else untouched
+        with open(out) as fh:
+            old = json.load(fh)
+        fresh = {r["name"]: r for r in rows}
+        merged = [fresh.pop(r.get("name"), r) for r in old.get("rows", ())]
+        merged += list(fresh.values())
+        results = dict(old)
+        results["rows"] = merged
     with open(out, "w") as fh:
         json.dump(results, fh, indent=2)
     print(f"wrote {out}")

@@ -32,6 +32,48 @@ the cohort:
 pre-participation driver.  Everything composes with ``--block-size M``
 (or ``--block-size auto``) fused round blocks and ``--warmup-rounds N``
 round-indexed LR schedules.
+
+Failure modes and recovery
+--------------------------
+``--participation async`` switches to the buffered staleness-aware
+protocol: every node trains against the LAST global it received, finished
+reports land in a server-side buffer after a sampled lag, and each round
+the server averages whatever is fresh enough.  The failure simulator runs
+ON DEVICE from a carried RNG state, so the whole fault schedule rides the
+fused round blocks and is reproducible from ``--participation-seed``:
+
+    # straggling reports: geometric lag, capped at 4 rounds; reports
+    # older than 2 rounds get zero weight (bounded staleness)
+    PYTHONPATH=src python examples/train_federated_lm.py \
+        --participation async --lag-dist geometric --lag-p 0.5 \
+        --max-lag 4 --max-staleness 2 --staleness cutoff
+
+    # soft staleness discounting instead: weight ~ (1 + lag)^-alpha
+    PYTHONPATH=src python examples/train_federated_lm.py \
+        --participation async --lag-dist fixed --lag 1 \
+        --staleness poly --staleness-alpha 1.0
+
+    # crash-and-rejoin: 10% of online nodes crash per round (their
+    # in-flight report is lost), crashed nodes rejoin with p=0.5
+    PYTHONPATH=src python examples/train_federated_lm.py \
+        --participation async --crash-rate 0.1 --rejoin-rate 0.5
+
+    # byzantine/fault injection: node 1's reports are corrupted to NaN
+    # on device; the quarantine guard zeroes its contribution and bumps
+    # its per-node counter (printed per round) — the run stays finite
+    PYTHONPATH=src python examples/train_federated_lm.py \
+        --participation async --poison-nodes 1 --quarantine-norm 1e6
+
+Quarantine triggers on non-finite report values OR an update norm above
+``--quarantine-norm``; quarantined reports are dropped before they touch
+the buffer, so one bad node can never poison the global average.
+
+Crash recovery composes with the fused blocks: the library's
+``Federation.run_rounds(..., checkpoint_path=..., checkpoint_every=N)``
+streams checkpoints from INSIDE a compiled M-round block (an io_callback
+state tap every N rounds), so a preempted run restores bit-identically
+losing at most N rounds — see tests/test_async.py for the
+kill-and-resume proof.
 """
 import argparse
 import sys
@@ -45,11 +87,15 @@ def main():
                     help="~100M params, 25 rounds x 8 local steps")
     ap.add_argument("--arch", default="fedmm-small")
     ap.add_argument("--participation", default="full",
-                    choices=["full", "uniform", "precision", "dropout"])
+                    choices=["full", "uniform", "precision", "dropout",
+                             "async"])
     ap.add_argument("--cohort-size", type=int, default=None)
     ap.add_argument("--dropout-rate", type=float, default=0.25)
-    # anything else (--block-size, --warmup-rounds, ...) passes through to
-    # the underlying repro.launch.train driver
+    # anything else (--block-size, --warmup-rounds, and the async flags
+    # --lag-dist/--lag/--lag-p/--max-lag/--max-staleness/--staleness/
+    # --staleness-alpha/--crash-rate/--rejoin-rate/--transient-rate/
+    # --quarantine-norm/--poison-nodes) passes through to the underlying
+    # repro.launch.train driver
     args, extra = ap.parse_known_args()
     part = ["--participation", args.participation,
             "--dropout-rate", str(args.dropout_rate)] + extra

@@ -1,4 +1,5 @@
-from repro.checkpoint.checkpoint import (load_checkpoint, read_meta,
-                                         save_checkpoint)
+from repro.checkpoint.checkpoint import (CheckpointError, load_checkpoint,
+                                         read_meta, save_checkpoint)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "read_meta"]
+__all__ = ["save_checkpoint", "load_checkpoint", "read_meta",
+           "CheckpointError"]

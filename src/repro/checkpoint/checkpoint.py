@@ -18,6 +18,13 @@ import numpy as np
 _BF16 = "bfloat16"
 
 
+class CheckpointError(RuntimeError):
+    """A checkpoint file is unreadable — truncated, bit-flipped, or not a
+    checkpoint at all.  Message always carries the path and, where known,
+    expected-vs-found sizes, so an operator can tell a half-written file
+    from a wrong path at a glance."""
+
+
 def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     out = {}
@@ -58,30 +65,89 @@ def save_checkpoint(path: str, tree, step: int = 0,
                 os.remove(f)
 
 
+def _open_checkpoint(path: str):
+    """np.load with the opaque failure modes translated into
+    ``CheckpointError``: a truncated download / half-copied file raises
+    zipfile or struct errors deep inside numpy; a bit-flipped member
+    raises on CRC or on json decode.  All of them become one clear error
+    carrying the path and the on-disk vs expected sizes."""
+    try:
+        found = os.path.getsize(path)
+    except OSError as e:
+        raise CheckpointError(f"checkpoint {path!r}: {e}") from e
+    try:
+        data = np.load(path, allow_pickle=False)
+    except Exception as e:
+        raise CheckpointError(
+            f"checkpoint {path!r} is not a readable .npz archive "
+            f"({found} bytes on disk): {type(e).__name__}: {e} — the "
+            f"file is truncated, corrupt, or not a checkpoint") from e
+    return data, found
+
+
+def _read_header(data, path: str, found: int) -> Dict[str, Any]:
+    try:
+        if "__meta__" not in data:
+            raise KeyError("__meta__")
+        return json.loads(str(data["__meta__"]))
+    except Exception as e:
+        data.close()
+        raise CheckpointError(
+            f"checkpoint {path!r} ({found} bytes on disk) has no readable "
+            f"__meta__ header: {type(e).__name__}: {e} — the archive is "
+            f"corrupt or was not written by save_checkpoint") from e
+
+
 def read_meta(path: str) -> Dict[str, Any]:
     """User metadata stored by ``save_checkpoint(..., meta=...)`` (empty
-    dict for checkpoints written before meta support existed)."""
-    with np.load(path, allow_pickle=False) as data:
-        return json.loads(str(data["__meta__"])).get("user_meta", {})
+    dict for checkpoints written before meta support existed).  Raises
+    ``CheckpointError`` on a truncated/corrupt file."""
+    data, found = _open_checkpoint(path)
+    with data:
+        return _read_header(data, path, found).get("user_meta", {})
 
 
 def load_checkpoint(path: str, like) -> Tuple[Any, int]:
-    """Restore into the structure of ``like`` (shape/dtype-checked)."""
-    with np.load(path, allow_pickle=False) as data:
-        meta = json.loads(str(data["__meta__"]))
+    """Restore into the structure of ``like`` (shape/dtype-checked).
+    Structure mismatches raise ``ValueError`` (wrong checkpoint for this
+    state); unreadable files — truncated, bit-flipped, not an archive —
+    raise ``CheckpointError`` with the path and expected-vs-found sizes."""
+    data, found = _open_checkpoint(path)
+    with data:
+        meta = _read_header(data, path, found)
         leaves_like, treedef = jax.tree_util.tree_flatten(like)
-        if len(leaves_like) != meta["n_leaves"]:
+        n_expected = meta["n_leaves"]
+        if len(leaves_like) != n_expected:
             raise ValueError(
-                f"checkpoint has {meta['n_leaves']} leaves, target structure "
+                f"checkpoint has {n_expected} leaves, target structure "
                 f"has {len(leaves_like)}")
+        stored = [k for k in data.files if k.startswith("leaf_")]
+        if len(stored) != n_expected:
+            raise CheckpointError(
+                f"checkpoint {path!r} ({found} bytes on disk) is "
+                f"truncated: header promises {n_expected} leaves, archive "
+                f"holds {len(stored)}")
         out = []
         for i, (ref_leaf, dt) in enumerate(zip(leaves_like, meta["dtypes"])):
-            arr = data[f"leaf_{i}"]
+            try:
+                arr = data[f"leaf_{i}"]
+            except Exception as e:
+                raise CheckpointError(
+                    f"checkpoint {path!r}: leaf_{i} of {n_expected} is "
+                    f"unreadable ({found} bytes on disk): "
+                    f"{type(e).__name__}: {e} — truncated or bit-flipped "
+                    f"archive member") from e
             if dt == _BF16:
                 arr = arr.view(jnp.bfloat16)
             leaf = jnp.asarray(arr)
             if hasattr(ref_leaf, "shape") and leaf.shape != ref_leaf.shape:
-                raise ValueError(f"leaf {i}: shape {leaf.shape} != "
-                                 f"{ref_leaf.shape}")
+                expected = int(np.prod(ref_leaf.shape)) \
+                    if hasattr(ref_leaf, "shape") else -1
+                raise CheckpointError(
+                    f"checkpoint {path!r}: leaf {i} has shape "
+                    f"{leaf.shape} ({leaf.size} elements), expected "
+                    f"{ref_leaf.shape} ({expected} elements) — truncated "
+                    f"write or a checkpoint from a different state "
+                    f"structure")
             out.append(leaf)
     return jax.tree_util.tree_unflatten(treedef, out), meta["step"]

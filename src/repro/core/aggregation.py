@@ -127,6 +127,20 @@ def weighted_average_bucketed(bucket_trees, weights: Array, shipped_masks,
                               bucket_sizes))
 
 
+def weighted_average_reports(report_tree, weights: Array):
+    """Weighted average over the async REPORT BUFFER: every leaf of
+    ``report_tree`` stacks the K nodes' buffered shipped side-cars along a
+    leading axis (identical shapes across nodes — only shipped leaves are
+    buffered), ``weights`` is (K,) and already staleness-normalised (it
+    may be all-zero on a no-delivery round, in which case the result is
+    the zero tree and the caller keeps the previous global value).
+    Returns the reduced float32 tree."""
+    w = weights.astype(jnp.float32)
+    return jax.tree.map(
+        lambda leaf: jnp.tensordot(w, leaf.astype(jnp.float32), axes=1),
+        report_tree)
+
+
 def comm_bytes_per_round(trainable_tree, gram_side: int = 0) -> int:
     """Uplink bytes a node ships per round under the paper's protocol:
     the trainable side-cars + the B x B Gram matrix (f32)."""

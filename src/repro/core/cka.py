@@ -59,16 +59,24 @@ def geo_alignment_loss(pooled_anchors: Array, consensus_gram: Array, *,
                      center=center)
 
 
-def consensus_gram(node_grams: Array, mask: Array = None) -> Array:
+def consensus_gram(node_grams: Array, mask: Array = None,
+                   fallback: Array = None) -> Array:
     """Server side: G_bar = mean_k G^(k). node_grams: (K, B, B) (the server
     may only ever see these Gram matrices, not activations).  With a
     participation ``mask`` (K,) the mean runs over REPORTING nodes only —
-    Eq. 2 averaged over whichever nodes upload this round."""
+    Eq. 2 averaged over whichever nodes upload this round.  ``fallback``
+    (B, B) is returned when the mask selects NO reporters (an async round
+    with no fresh-enough deliveries keeps the previous consensus instead
+    of collapsing to the zero Gram)."""
     if mask is None:
         return node_grams.mean(axis=0)
     m = mask.astype(jnp.float32)
     num = (m[:, None, None] * node_grams.astype(jnp.float32)).sum(axis=0)
-    return num / jnp.maximum(m.sum(), 1.0)
+    mean = num / jnp.maximum(m.sum(), 1.0)
+    if fallback is None:
+        return mean
+    return jnp.where(m.sum() > 0.0, mean,
+                     fallback.astype(jnp.float32))
 
 
 def pairwise_cka(grams: Array, *, center: bool = False) -> Array:

@@ -163,6 +163,20 @@ def _as_buckets(x) -> tuple:
     return x if isinstance(x, tuple) else (x,)
 
 
+def _safe_tap(fn, *args):
+    """Host side of every engine ``io_callback`` tap: an exception in the
+    user's callback (disk-full during an in-block checkpoint, a logger
+    bug) is LOGGED AND DROPPED instead of propagating into the runtime
+    and killing the in-flight block — taps are observability, never
+    control flow."""
+    try:
+        fn(*args)
+    except Exception:
+        import logging
+        logging.getLogger("repro.engine").exception(
+            "engine tap callback raised; payload dropped")
+
+
 class RoundEngine:
     """One federated round as a single compiled function.
 
@@ -537,6 +551,299 @@ class RoundEngine:
                 server_m, part_state, metrics)
 
     # ------------------------------------------------------------------
+    # async (FedBuff-style) round body: buffered reports, staleness-
+    # weighted precision averaging, quarantine guard.
+    def _shipped_rows(self, trains):
+        """(K,)-row stack of the SHIPPED side-car leaves across buckets
+        (float32, ``None`` at non-shipped leaves): the payload layout of
+        the async report buffer.  Shipped shapes are identical in every
+        bucket, so the per-bucket node stacks concatenate along rows."""
+        none = lambda x: x is None
+        parts = [jax.tree.map(
+            lambda l, m_: (l.astype(jnp.float32)
+                           if (l is not None and m_) else None),
+            tree, mask, is_leaf=none)
+            for tree, mask in zip(trains, self.shipped_masks)]
+        return jax.tree.map(
+            lambda *ls: (None if ls[0] is None else jnp.concatenate(ls)),
+            *parts, is_leaf=none)
+
+    def init_async_state(self, trains, plan, gram_side: int):
+        """Initial carried async state for ``plan``: the participation CTL
+        arrays (RNG key, offline/countdown/lag/quarantined) plus the
+        zeroed REPORT BUFFER — per-node shipped side-cars, anchor Gram
+        panels, LAP precisions — shaped from ``trains``.  Rides the
+        donated round/block carry and the checkpoint like every other
+        piece of round state, so fused blocks and kill-and-resume compose
+        with the async stream bit-identically."""
+        plan = part_mod.normalize(plan)
+        if plan is None or plan.strategy != "async":
+            raise ValueError("init_async_state needs an async plan")
+        k = self.ecfg.n_nodes
+        none = lambda x: x is None
+        buf = {
+            "shipped": jax.tree.map(
+                lambda l: None if l is None else jnp.zeros_like(l),
+                self._shipped_rows(trains), is_leaf=none),
+            "gram": jnp.zeros((k, gram_side, gram_side), jnp.float32),
+            "prec": jnp.zeros((k,), jnp.float32),
+        }
+        return {"ctl": part_mod.init_state(plan, k), "buf": buf}
+
+    def _async_server(self, plan, trains, start, lag_draw, shipped, grams,
+                      prec, buf, ctl, gbar, prev, server_m):
+        """The async server step on FULL (K,)-row report arrays: fault
+        injection, the on-device quarantine guard, the buffer write, the
+        staleness-weighted delivery average, and the broadcast.  Shared
+        by the single-host and shard_map round bodies — the sharded path
+        gathers its per-shard reports into replicated full arrays first,
+        so the server math (and therefore the oracle equivalence) is
+        identical on both.
+
+        A round with no deliveries (or all deliveries staled out) keeps
+        the previous broadcast value, consensus Gram and FedAvgM momentum
+        — the protocol idles rather than collapsing toward zero."""
+        k = self.ecfg.n_nodes
+        none = lambda x: x is None
+
+        # fault injection: poison_nodes' uplink reports (NEVER their local
+        # state) are corrupted to NaN — the guard below must catch them
+        rows = [i for g in self._groups for i in g]
+        if plan.poison_nodes:
+            pm = jnp.asarray([1.0 if i in plan.poison_nodes else 0.0
+                              for i in rows], jnp.float32)
+            nanify = lambda l: l + jnp.where(
+                pm.reshape((k,) + (1,) * (l.ndim - 1)) > 0,
+                jnp.float32(jnp.nan), jnp.float32(0.0))
+            shipped = jax.tree.map(
+                lambda l: None if l is None else nanify(l),
+                shipped, is_leaf=none)
+            grams, prec = nanify(grams), nanify(prec)
+
+        # quarantine guard, ON DEVICE, before anything enters the buffer:
+        # non-finite anywhere in the report, or an exploded side-car norm
+        finite = jnp.ones((k,), bool)
+        norm_sq = jnp.zeros((k,), jnp.float32)
+        for leaf in jax.tree.leaves(shipped):
+            flat = leaf.reshape(k, -1)
+            finite &= jnp.isfinite(flat).all(axis=1)
+            norm_sq += (flat.astype(jnp.float32) ** 2).sum(axis=1)
+        finite &= jnp.isfinite(grams.reshape(k, -1)).all(axis=1)
+        finite &= jnp.isfinite(prec.reshape(k, -1)).all(axis=1)
+        qn = jnp.float32(plan.quarantine_norm)
+        bad = ((~finite) | (norm_sq > qn * qn)).astype(jnp.float32)
+        ok = start * (1.0 - bad)
+        ctl = dict(ctl, quarantined=ctl["quarantined"]
+                   + (start * bad).astype(jnp.int32))
+
+        # buffer write at the ACCEPTED rows only (a rejected reporter
+        # stays idle and retries next round; its old buffer slot is inert
+        # because its countdown was never armed)
+        sel = lambda new, old: jnp.where(
+            ok.reshape((k,) + (1,) * (new.ndim - 1)) > 0, new, old)
+        buf = {
+            "shipped": jax.tree.map(
+                lambda n, o: None if n is None else sel(n, o),
+                shipped, buf["shipped"], is_leaf=none),
+            "gram": sel(grams.astype(jnp.float32), buf["gram"]),
+            "prec": sel(prec.astype(jnp.float32), buf["prec"]),
+        }
+        countdown = jnp.where(ok > 0, lag_draw, ctl["countdown"])
+        lag = jnp.where(ok > 0, lag_draw, ctl["lag"])
+
+        # delivery: reports whose lag expires THIS round, weighted by
+        # precision * staleness factor and normalised over the deliveries
+        delivered = (countdown == 0).astype(jnp.float32)
+        f = unc.staleness_factor(lag, plan.staleness,
+                                 plan.staleness_alpha, plan.max_staleness)
+        fresh = delivered * (f > 0.0).astype(jnp.float32)
+        base = (buf["prec"] if self.ecfg.aggregation == "precision"
+                else jnp.ones((k,), jnp.float32))
+        wn = unc.stale_precision_weights(
+            base, lag, delivered, plan.staleness, plan.staleness_alpha,
+            plan.max_staleness)
+        any_del = wn.sum() > 0.0
+        total = agg.weighted_average_reports(buf["shipped"], wn)
+        pick = lambda t, p_: jnp.where(any_del, t, p_)
+        if server_m is None:
+            new_val = jax.tree.map(pick, total, prev)
+        else:
+            m2, v2 = self._apply_server_momentum(prev, total, server_m)
+            server_m = jax.tree.map(pick, m2, server_m)
+            new_val = jax.tree.map(pick, v2, prev)
+        trains = list(agg.broadcast_into_buckets(
+            tuple(trains), self.shipped_masks, new_val))
+        new_gbar = cka_mod.consensus_gram(buf["gram"], mask=fresh,
+                                          fallback=gbar)
+        countdown = jnp.where(delivered > 0, jnp.int32(-1),
+                              jnp.where(countdown > 0, countdown - 1,
+                                        countdown))
+        ctl = dict(ctl, countdown=countdown, lag=lag)
+        server_metrics = {
+            "weights": wn,
+            "delivered": delivered,
+            "staleness": jnp.where(delivered > 0, lag,
+                                   jnp.int32(-1)).astype(jnp.float32),
+            "quarantined": ctl["quarantined"].astype(jnp.float32),
+            "n_delivered": delivered.sum(),
+            "cross_node_cka": cka_mod.mean_offdiag_cka(
+                buf["gram"], center=self.ecfg.center_cka, mask=fresh),
+        }
+        return trains, new_gbar, server_m, {"ctl": ctl, "buf": buf}, \
+            server_metrics
+
+    def _round_async(self, plan, trains, opts, keys, gbar, server_m,
+                     part_state, statics, batches):
+        """One async round: the carried lag-and-failure simulator decides
+        which idle nodes START local work this round; starters' state
+        advances (masked path — non-starters carry through untouched) and
+        their reports enter the carried buffer through the quarantine
+        guard with a drawn delivery lag; the server aggregates exactly
+        the reports whose lag expires this round, staleness-weighted."""
+        k = self.ecfg.n_nodes
+        prev = self._server_prev(trains)
+        ctl, buf = part_state["ctl"], part_state["buf"]
+        start, lag_draw, ctl = part_mod.async_events(plan, ctl)
+        trains, opts, keys = list(trains), list(opts), list(keys)
+        lasts, off = [], 0
+        for b in range(self.n_buckets):
+            kb = self.bucket_sizes[b]
+            mb = start[off:off + kb]
+            off += kb
+            tr2, op2, ke2, last = self._local_epochs(
+                trains[b], opts[b], keys[b], gbar, statics[b], batches[b])
+            trains[b] = masked_select(mb, tr2, trains[b])
+            opts[b] = masked_select(mb, op2, opts[b])
+            keys[b] = masked_select(mb, ke2, keys[b])
+            lasts.append(last)
+        pooled = jnp.concatenate([l.pop("pooled") for l in lasts])
+        pooled_a = jnp.concatenate([l.pop("pooled_a") for l in lasts])
+        scalars = {name: jnp.concatenate([l[name] for l in lasts]) * start
+                   for name in lasts[0]}
+        grams = self._grams_of(pooled_a)
+        if self.ecfg.aggregation == "precision":
+            prec = unc.batched_precisions(pooled, pooled_a)
+        else:
+            prec = jnp.ones((k,), jnp.float32)
+        shipped = self._shipped_rows(trains)
+        trains, new_gbar, server_m, part_state, srv = self._async_server(
+            plan, trains, start, lag_draw, shipped, grams, prec, buf,
+            ctl, gbar, prev, server_m)
+        metrics = {
+            "scalars": {name: self._unpermute(v)
+                        for name, v in scalars.items()},
+            "weights": self._unpermute(srv["weights"]),
+            "cross_node_cka": srv["cross_node_cka"],
+            "participation": self._unpermute(start),
+            "cohort_size": start.sum(),
+            "delivered": self._unpermute(srv["delivered"]),
+            "staleness": self._unpermute(srv["staleness"]),
+            "quarantined": self._unpermute(srv["quarantined"]),
+            "n_delivered": srv["n_delivered"],
+        }
+        return (tuple(trains), tuple(opts), tuple(keys), new_gbar,
+                server_m, part_state, metrics)
+
+    def _round_sharded_async(self, plan, trains, opts, keys, gbar,
+                             server_m, part_state, statics, batches):
+        """Async on the shard_map path.  The CTL arrays and the report
+        buffer are REPLICATED (every shard draws the identical event
+        stream from the shared key and runs the identical full-K server
+        step — replication is maintained because the math is
+        deterministic); only the local epochs and per-node report
+        computation are sharded, then per-bucket all_gathers reassemble
+        the full (K, ...) report arrays.  Buffer replication costs
+        side-car-sized memory per shard — acceptable because only
+        SHIPPED (low-rank) leaves are buffered."""
+        ax = self._axes
+        mesh_shape = dict(self.mesh.shape)
+        node_spec = P(ax)
+        batch_specs = tuple(P() if b is None else P(None, ax)
+                            for b in batches)
+
+        def inner(trains, opts, keys, gbar, server_m, part_state, statics,
+                  batches):
+            k = self.ecfg.n_nodes
+            prev = self._server_prev(trains)
+            ctl, buf = part_state["ctl"], part_state["buf"]
+            start, lag_draw, ctl = part_mod.async_events(plan, ctl)
+            shard = jnp.zeros((), jnp.int32)
+            for a in ax:
+                shard = shard * mesh_shape[a] + jax.lax.axis_index(a)
+            trains, opts, keys = list(trains), list(opts), list(keys)
+            lasts, off = [], 0
+            for b in range(self.n_buckets):
+                kb = self.bucket_sizes[b]
+                kb_l = keys[b].shape[0]
+                sb = start[off:off + kb]
+                off += kb
+                mb = jax.lax.dynamic_slice(sb, (shard * kb_l,), (kb_l,))
+                tr2, op2, ke2, last = self._local_epochs(
+                    trains[b], opts[b], keys[b], gbar, statics[b],
+                    batches[b])
+                trains[b] = masked_select(mb, tr2, trains[b])
+                opts[b] = masked_select(mb, op2, opts[b])
+                keys[b] = masked_select(mb, ke2, keys[b])
+                lasts.append(last)
+            pooled = jnp.concatenate([l.pop("pooled") for l in lasts])
+            pooled_a = jnp.concatenate([l.pop("pooled_a") for l in lasts])
+            kb_loc = tuple(ks.shape[0] for ks in keys)
+            k_loc = sum(kb_loc)
+
+            grams_loc = self._grams_of(pooled_a)
+            if self.ecfg.aggregation == "precision":
+                prec_loc = unc.batched_precisions(pooled, pooled_a)
+            else:
+                prec_loc = jnp.ones((k_loc,), jnp.float32)
+            shipped_loc = self._shipped_rows(trains)
+
+            gather = functools.partial(jax.lax.all_gather, axis_name=ax,
+                                       axis=0, tiled=True)
+
+            def gather_cat(v_loc):
+                off2, parts = 0, []
+                for kbl in kb_loc:
+                    parts.append(gather(v_loc[off2:off2 + kbl]))
+                    off2 += kbl
+                return jnp.concatenate(parts)
+
+            none = lambda x: x is None
+            shipped = jax.tree.map(
+                lambda l: None if l is None else gather_cat(l),
+                shipped_loc, is_leaf=none)
+            grams = gather_cat(grams_loc)
+            prec = gather_cat(prec_loc)
+            scalars = {name: gather_cat(jnp.concatenate(
+                [l[name] for l in lasts])) * start for name in lasts[0]}
+
+            trains, new_gbar, server_m, part_state, srv = \
+                self._async_server(plan, trains, start, lag_draw, shipped,
+                                   grams, prec, buf, ctl, gbar, prev,
+                                   server_m)
+            metrics = {
+                "scalars": {name: self._unpermute(v)
+                            for name, v in scalars.items()},
+                "weights": self._unpermute(srv["weights"]),
+                "cross_node_cka": srv["cross_node_cka"],
+                "participation": self._unpermute(start),
+                "cohort_size": start.sum(),
+                "delivered": self._unpermute(srv["delivered"]),
+                "staleness": self._unpermute(srv["staleness"]),
+                "quarantined": self._unpermute(srv["quarantined"]),
+                "n_delivered": srv["n_delivered"],
+            }
+            return (tuple(trains), tuple(opts), tuple(keys), new_gbar,
+                    server_m, part_state, metrics)
+
+        return _shard_map(
+            inner, mesh=self.mesh,
+            in_specs=(node_spec, node_spec, node_spec, P(), P(), P(),
+                      node_spec, batch_specs),
+            out_specs=(node_spec, node_spec, node_spec, P(), P(), P(),
+                       P()),
+        )(trains, opts, keys, gbar, server_m, part_state, statics, batches)
+
+    # ------------------------------------------------------------------
     def _round_sharded(self, trains, opts, keys, gbar, server_m, statics,
                        batches):
         """shard_map path: each bucket's node axis split over the mesh
@@ -743,8 +1050,12 @@ class RoundEngine:
         fn = self._part_cache.get(plan)
         if fn is not None:
             return fn
-        body = (self._round_part if self.mesh is None
-                else self._round_sharded_part)
+        if plan.strategy == "async":
+            body = (self._round_async if self.mesh is None
+                    else self._round_sharded_async)
+        else:
+            body = (self._round_part if self.mesh is None
+                    else self._round_sharded_part)
         donate = (0, 1, 2, 3, 4, 5) if self.ecfg.donate else ()
         fn = jax.jit(functools.partial(body, plan), donate_argnums=donate)
         self._part_cache[plan] = fn
@@ -752,29 +1063,49 @@ class RoundEngine:
 
     # ------------------------------------------------------------------
     # fused multi-round blocks: lax.scan over M whole rounds, one dispatch
-    def block_fn(self, m: int, *, tap=None, plan=None):
+    def block_fn(self, m: int, *, tap=None, plan=None, state_tap=None,
+                 state_tap_every: int = 0):
         """Compiled M-round block: ``jax.lax.scan`` over the round body with
         the (trains, opts, keys, gbar, server_m) carry DONATED, so M rounds
         cost one dispatch and zero intermediate host syncs.  ``tap`` is an
         optional host callback fired once per round (via ``io_callback``,
         ordered) with that round's metrics — an async log stream that never
-        blocks the device.  Compiled functions are cached per (m, has-tap):
-        the tap routes through a holder read at callback time, so passing a
-        fresh closure per call swaps the target without re-tracing the
-        M-round scan (the LATEST tap handles any still-in-flight blocks;
-        ``jax.effects_barrier()`` drains pending callbacks before swapping
-        if that matters).  Scan traces the round body once, so compile time
-        is ~independent of M."""
+        blocks the device.  Compiled functions are cached per
+        (m, has-tap, plan, has-state-tap, every): the taps route through
+        holders read at callback time, so passing a fresh closure per call
+        swaps the target without re-tracing the M-round scan (the LATEST
+        tap handles any still-in-flight blocks; ``jax.effects_barrier()``
+        drains pending callbacks before swapping if that matters).  Scan
+        traces the round body once, so compile time is ~independent of M.
+
+        ``state_tap`` is the IN-BLOCK CHECKPOINT tap: a host callback
+        ``state_tap(abs_round, carry)`` fired every ``state_tap_every``
+        rounds FROM INSIDE the scan (unordered ``io_callback`` under a
+        ``lax.cond``), so preemption during a long fused block loses
+        < state_tap_every rounds instead of the whole block.  When armed,
+        the compiled block takes one extra TRAILING scalar argument — the
+        absolute round offset of the block — so in-flight blocks carry
+        their own base round and the holder-swap pattern stays valid.
+        Host-side exceptions in either tap are logged and dropped
+        (``_safe_tap``) — a full disk never kills the in-flight block."""
         if m < 1:
             raise ValueError(f"block size must be >= 1, got {m}")
+        if state_tap is not None and not 1 <= state_tap_every <= m:
+            raise ValueError(f"state_tap_every {state_tap_every} outside "
+                             f"[1, {m}]")
         plan = part_mod.normalize(plan)
-        cache_key = (m, tap is not None, plan)
+        cache_key = (m, tap is not None, plan, state_tap is not None,
+                     state_tap_every if state_tap is not None else 0)
         if tap is not None:
             self._tap_holders.setdefault(cache_key, [None])[0] = tap
+        if state_tap is not None:
+            self._tap_holders.setdefault(("state",) + cache_key,
+                                         [None])[0] = state_tap
         fn = self._block_cache.get(cache_key)
         if fn is not None:
             return fn
         holder = self._tap_holders.get(cache_key)
+        sholder = self._tap_holders.get(("state",) + cache_key)
         # the tap is ORDERED on a single host (log lines arrive in round
         # order) but UNORDERED on a mesh, so per-host callback delivery
         # never serialises the pods (ROADMAP item); each payload carries
@@ -786,22 +1117,42 @@ class RoundEngine:
                 return
             from jax.experimental import io_callback
             io_callback(
-                lambda i, metr: holder[0](dict(metr,
-                                               round_in_block=int(i))),
+                lambda i, metr: _safe_tap(
+                    holder[0], dict(metr, round_in_block=int(i))),
                 None, ridx, metrics, ordered=ordered_tap)
+
+        def fire_state_tap(carry, ridx, r0):
+            # unordered io_callback is legal under lax.cond (ordered is
+            # not), and checkpoint writes are self-describing (each
+            # payload carries its absolute round), so ordering is free
+            if sholder is None:
+                return
+            from jax.experimental import io_callback
+            every = state_tap_every
+
+            def fire(c):
+                io_callback(
+                    lambda r_, c_: _safe_tap(sholder[0], int(r_), c_),
+                    None, r0 + ridx + 1, c, ordered=False)
+                return jnp.int32(0)
+
+            jax.lax.cond((ridx + 1) % every == 0,
+                         fire, lambda c: jnp.int32(0), carry)
 
         if plan is None:
             body_fn = (self._round if self.mesh is None
                        else self._round_sharded)
 
             def block(trains, opts, keys, gbar, server_m, statics,
-                      batches):
+                      batches, *r0):
                 def body(carry, xs):
                     ridx, bt = xs
                     tr, op, ks, gb, sm = carry
                     tr, op, ks, gb, sm, metrics = body_fn(
                         tr, op, ks, gb, sm, statics, bt)
                     fire_tap(metrics, ridx)
+                    fire_state_tap((tr, op, ks, gb, sm), ridx,
+                                   r0[0] if r0 else 0)
                     return (tr, op, ks, gb, sm), metrics
 
                 # per-bucket batches carry leading (M, E, k_b, ...) axes
@@ -816,17 +1167,23 @@ class RoundEngine:
 
             donate = (0, 1, 2, 3, 4) if self.ecfg.donate else ()
         else:
-            part_body = (self._round_part if self.mesh is None
-                         else self._round_sharded_part)
+            if plan.strategy == "async":
+                part_body = (self._round_async if self.mesh is None
+                             else self._round_sharded_async)
+            else:
+                part_body = (self._round_part if self.mesh is None
+                             else self._round_sharded_part)
 
             def block(trains, opts, keys, gbar, server_m, part_state,
-                      statics, batches):
+                      statics, batches, *r0):
                 def body(carry, xs):
                     ridx, bt = xs
                     tr, op, ks, gb, sm, ps = carry
                     tr, op, ks, gb, sm, ps, metrics = part_body(
                         plan, tr, op, ks, gb, sm, ps, statics, bt)
                     fire_tap(metrics, ridx)
+                    fire_state_tap((tr, op, ks, gb, sm, ps), ridx,
+                                   r0[0] if r0 else 0)
                     return (tr, op, ks, gb, sm, ps), metrics
 
                 (trains, opts, keys, gbar, server_m, part_state), \
@@ -843,7 +1200,8 @@ class RoundEngine:
         return fn
 
     def run_block(self, state, m: int, *, statics, batches=None, tap=None,
-                  plan=None):
+                  plan=None, state_tap=None, state_tap_every: int = 0,
+                  round_offset: int = 0):
         """Run M fused rounds in ONE donated dispatch.
 
         ``state`` is the round carry ``(trains, opts, keys, gbar,
@@ -854,13 +1212,22 @@ class RoundEngine:
         device.  Returns ``(state, metrics)`` where every metrics leaf
         gained a leading M axis (round-major).  The call is ASYNC: nothing
         blocks until the caller materialises an output, so drivers can
-        stage block N+1's batches while block N is in flight."""
+        stage block N+1's batches while block N is in flight.
+
+        ``state_tap``/``state_tap_every``/``round_offset`` arm the
+        in-block checkpoint tap (see ``block_fn``): ``state_tap(abs_round,
+        carry)`` fires from inside the scan every ``state_tap_every``
+        rounds, with ``abs_round = round_offset + rounds completed``."""
         if batches is None:
             batches = (None,) * self.n_buckets
         plan = part_mod.normalize(plan)
         n_state = 5 if plan is None else 6
-        out = self.block_fn(m, tap=tap, plan=plan)(*state, statics,
-                                                   batches)
+        fn = self.block_fn(m, tap=tap, plan=plan, state_tap=state_tap,
+                           state_tap_every=state_tap_every)
+        args = (*state, statics, batches)
+        if state_tap is not None:
+            args = args + (jnp.int32(round_offset),)
+        out = fn(*args)
         return out[:n_state], out[n_state]
 
 

@@ -526,12 +526,207 @@ class SequentialFederation:
         plan = part_mod.normalize(participation)
         if plan is None:
             return [self.run_round() for _ in range(n)]
+        if plan.strategy == "async":
+            return [self._run_async_round(plan) for _ in range(n)]
         recs = []
         for _ in range(n):
             parts, groups = self._sample_participants(plan)
             recs.append(self.run_round(participants=parts))
             self._update_seq_sampler(plan, groups, set(parts))
         return recs
+
+    # ------------------------------------------------------------------
+    # async (FedBuff) reference: the SAME ``async_events`` draws from the
+    # same carried key produce the identical lag/failure stream the
+    # engine's compiled round consumes, and the server math calls the
+    # same staleness/consensus functions — this eager loop is the oracle
+    # the fused async engine path is equivalence-tested against.
+    def _run_async_round(self, plan) -> dict:
+        fed = self.fed
+        k = fed.n_nodes
+        groups = self._participation_groups()
+        rows = [i for g in groups for i in g]      # canonical id per row
+        prev = getattr(self, "_seq_async", None)
+        if prev is None or prev[0] != plan:
+            self._seq_async = (plan, part_mod.init_state(plan, k),
+                               [None] * k)
+        _, ctl, buf = self._seq_async
+        # the server's previous broadcast value: shipped leaves are
+        # identical on every node at round start (node 0 is as good as
+        # any) — re-broadcast on a no-delivery round, like the engine
+        smask0 = _shipped_mask(self.nodes[0]["trainable"])
+        prev_shipped, _ = _split_by_mask(self.nodes[0]["trainable"],
+                                         smask0)
+        prev_shipped = {kk: v for kk, v in prev_shipped.items()
+                        if any(l is not None for l in jax.tree.leaves(
+                            v, is_leaf=lambda x: x is None))}
+        prev_shipped = jax.tree.map(lambda l: l.astype(jnp.float32),
+                                    prev_shipped)
+        start, lag_draw, ctl = part_mod.async_events(plan, ctl)
+        start_np = [float(v) for v in start]
+        countdown = [int(v) for v in ctl["countdown"]]
+        lag = [int(v) for v in ctl["lag"]]
+        quarantined = [int(v) for v in ctl["quarantined"]]
+
+        # starters run their local epochs; everyone else does NOTHING
+        metrics = {"task": [], "geo": [], "acc": []}
+        for r, i in enumerate(rows):
+            if start_np[r] <= 0:
+                continue
+            node = self.nodes[i]
+            if "round" in node["opt_state"]:
+                node["opt_state"] = dict(
+                    node["opt_state"],
+                    round=node["opt_state"]["round"] + 1)
+            m = node["modality"]
+            anchors = (self.synthetic_anchor_tokens[m]
+                       if i in fed.synthetic_anchor_nodes
+                       else self.anchor_tokens[m])
+            last = None
+            for _ in range(fed.local_steps):
+                node["key"], kb = jax.random.split(node["key"])
+                raw, labels = self.task.sample(kb, m, fed.local_batch,
+                                               corrupt=node["corrupt"])
+                tokens = self.tokenizers[m](raw)
+                if node.get("bridge"):
+                    m2 = node["modality2"]
+                    raw2, _ = self.task.sample(kb, m2, fed.local_batch)
+                    tokens2 = self.tokenizers[m2](raw2)
+                    node["trainable"], node["opt_state"], last = \
+                        self._bridge_step(
+                            node["trainable"], node["opt_state"],
+                            self.frozen_bridge, tokens, tokens2, labels,
+                            anchors, self.gbar)
+                else:
+                    node["trainable"], node["opt_state"], last = \
+                        self._local_step(
+                            node["trainable"], node["opt_state"],
+                            self.frozen, tokens, labels, anchors,
+                            self.gbar)
+            metrics["task"].append(float(last["task"]))
+            metrics["geo"].append(float(last["geo"]))
+            metrics["acc"].append(float(last["acc"]))
+
+            # the uplink report: shipped side-cars + Gram + precision
+            gram = cka_mod.cosine_gram(last["pooled_a"])
+            if fed.aggregation == "precision":
+                prec = unc.node_precision(unc.lap_uncertainty(
+                    last["pooled"], last["pooled_a"]))
+            else:
+                prec = jnp.float32(1.0)
+            smask = _shipped_mask(node["trainable"])
+            shipped, _ = _split_by_mask(node["trainable"], smask)
+            shipped = {kk: v for kk, v in shipped.items()
+                       if any(l is not None for l in jax.tree.leaves(
+                           v, is_leaf=lambda x: x is None))}
+            shipped = jax.tree.map(lambda l: l.astype(jnp.float32),
+                                   shipped)
+            if i in plan.poison_nodes:        # fault injection: uplink only
+                nan = jnp.float32(jnp.nan)
+                shipped = jax.tree.map(lambda l: l + nan, shipped)
+                gram, prec = gram + nan, prec + nan
+
+            # quarantine guard (same formula as the engine, eagerly)
+            finite = all(bool(jnp.isfinite(l).all())
+                         for l in jax.tree.leaves(shipped))
+            finite = finite and bool(jnp.isfinite(gram).all()) \
+                and bool(jnp.isfinite(prec).all())
+            norm_sq = sum(float((l.astype(jnp.float32) ** 2).sum())
+                          for l in jax.tree.leaves(shipped))
+            if (not finite) or norm_sq > plan.quarantine_norm ** 2:
+                quarantined[r] += 1
+                continue                        # idle again; retries next
+            buf[r] = {"shipped": shipped, "gram": gram,
+                      "prec": jnp.float32(prec)}
+            countdown[r] = int(lag_draw[r])
+            lag[r] = int(lag_draw[r])
+
+        # staleness-weighted delivery over expiring reports
+        delivered = [1.0 if (c == 0 and buf[r] is not None) else 0.0
+                     for r, c in enumerate(countdown)]
+        base = jnp.asarray(
+            [(float(buf[r]["prec"]) if buf[r] is not None else 0.0)
+             if fed.aggregation == "precision" else 1.0
+             for r in range(k)], jnp.float32)
+        wn = unc.stale_precision_weights(
+            base, jnp.asarray(lag, jnp.int32),
+            jnp.asarray(delivered, jnp.float32), plan.staleness,
+            plan.staleness_alpha, plan.max_staleness)
+        f = unc.staleness_factor(jnp.asarray(lag, jnp.int32),
+                                 plan.staleness, plan.staleness_alpha,
+                                 plan.max_staleness)
+        fresh = [d * (1.0 if float(f[r]) > 0 else 0.0)
+                 for r, d in enumerate(delivered)]
+        if float(wn.sum()) > 0:
+            total = None
+            for r in range(k):
+                w = wn[r]
+                if float(w) <= 0:
+                    continue
+                term = jax.tree.map(lambda l: w * l, buf[r]["shipped"])
+                total = term if total is None else jax.tree.map(
+                    lambda a, b_: a + b_, total, term)
+        else:
+            total = prev_shipped       # no deliveries: protocol idles
+        for node in self.nodes:
+            merged = dict(total)
+            for kk in node["trainable"]:
+                if kk not in merged:
+                    merged[kk] = jax.tree.map(
+                        lambda _: None, node["trainable"][kk])
+            node["trainable"] = _merge_by_mask(
+                merged, node["trainable"],
+                _shipped_mask(node["trainable"]))
+        if sum(fresh) > 0:
+            zeros = jnp.zeros_like(self.gbar)
+            grams = jnp.stack([buf[r]["gram"] if buf[r] is not None
+                               else zeros for r in range(k)])
+            self.gbar = cka_mod.consensus_gram(
+                grams, mask=jnp.asarray(fresh, jnp.float32),
+                fallback=self.gbar)
+            xcka = float(cka_mod.mean_offdiag_cka(
+                grams, center=fed.center_cka,
+                mask=jnp.asarray(fresh, jnp.float32)))
+        else:
+            xcka = 0.0
+        for r in range(k):
+            if delivered[r] > 0:
+                countdown[r] = -1
+            elif countdown[r] > 0:
+                countdown[r] -= 1
+
+        self._seq_async = (plan, dict(
+            ctl, countdown=jnp.asarray(countdown, jnp.int32),
+            lag=jnp.asarray(lag, jnp.int32),
+            quarantined=jnp.asarray(quarantined, jnp.int32)), buf)
+        n_started = max(sum(1 for s in start_np if s > 0), 1)
+        perm = rows
+        by_node = lambda vals: [vals[perm.index(i)]
+                                for i in range(k)]  # row -> canonical
+        rec = {
+            "task_loss": sum(metrics["task"]) / n_started,
+            "geo_loss": sum(metrics["geo"]) / n_started,
+            "acc": sum(metrics["acc"]) / n_started,
+            "cross_node_cka": xcka,
+            "weights": by_node([float(w) for w in wn]),
+            "participation": by_node(start_np),
+            "cohort_size": int(sum(start_np)),
+            "delivered": by_node(delivered),
+            "staleness": by_node([float(lag[r]) if delivered[r] > 0
+                                  else -1.0 for r in range(k)]),
+            "quarantined": by_node([float(q) for q in quarantined]),
+            "n_delivered": float(sum(delivered)),
+            "uplink_bytes": 0, "full_model_bytes": 0,
+        }
+        smask0 = _shipped_mask(self.nodes[0]["trainable"])
+        shipped0, _ = _split_by_mask(self.nodes[0]["trainable"], smask0)
+        rec["uplink_bytes"] = int(agg.comm_bytes_per_round(
+            shipped0, gram_side=self.gbar.shape[0]))
+        rec["full_model_bytes"] = int(lora_mod.param_bytes(
+            lora_mod.combine(self.nodes[0]["trainable"],
+                             self._frozen_for(self.nodes[0]))))
+        self.history.append(rec)
+        return rec
 
     def run(self, block_size: int = 1, participation=None) -> List[dict]:
         self.run_rounds(self.fed.rounds, block_size,
@@ -866,16 +1061,32 @@ class Federation(SequentialFederation):
                                     for p in sl(metrics["participation"])]
             rec["cohort_size"] = int(round(float(sl(
                 metrics["cohort_size"]))))
+        if "delivered" in metrics:
+            rec["delivered"] = [float(d) for d in sl(metrics["delivered"])]
+            rec["staleness"] = [float(s) for s in sl(metrics["staleness"])]
+            rec["quarantined"] = [float(q)
+                                  for q in sl(metrics["quarantined"])]
+            rec["n_delivered"] = float(sl(metrics["n_delivered"]))
         return rec
+
+    def _init_part_state(self, plan):
+        if plan is None:
+            return None
+        if plan.strategy == "async":
+            return self.engine.init_async_state(
+                self._trains, plan, gram_side=int(self.gbar.shape[0]))
+        return part_mod.init_state(plan, self.fed.n_nodes)
 
     def _ensure_participation(self, plan) -> None:
         """Install ``plan`` as the active participation plan, carrying the
         sampler state across calls (and through checkpoints) when the plan
-        is unchanged, re-seeding it when the plan switches."""
+        is unchanged, re-seeding it when the plan switches.  Async plans
+        additionally carry the zeroed report buffer (shaped from the
+        current stacked trainables) in the state."""
         if getattr(self, "_part_plan", None) != plan \
                 or not hasattr(self, "_part_state"):
             self._part_plan = plan
-            self._part_state = part_mod.init_state(plan, self.fed.n_nodes)
+            self._part_state = self._init_part_state(plan)
 
     def _run_round_part(self, plan) -> dict:
         (self._trains, self._opts, self._keys, self.gbar, self._server_m,
@@ -888,8 +1099,40 @@ class Federation(SequentialFederation):
         self.history.append(rec)
         return rec
 
+    def _make_state_tap(self, path: str):
+        """Host side of the in-block checkpoint tap: receives the block
+        carry at round granularity from inside the fused scan and writes
+        a checkpoint structurally identical to ``save()`` (restorable by
+        ``restore()``).  ``path`` may contain ``{step}``; otherwise the
+        file is overwritten in place (atomic rename in save_checkpoint,
+        so a crash mid-write never corrupts the previous one).  Raising
+        here (disk full) is logged and dropped by the engine's tap guard
+        — a failing checkpoint never kills the in-flight block."""
+        from repro.checkpoint import save_checkpoint
+        meta = {"server_momentum": self.fed.server_momentum,
+                "n_buckets": len(self._trains),
+                "round_schedule": self.fed.round_lr_schedule is not None,
+                "participation": part_mod.plan_meta(
+                    getattr(self, "_part_plan", None))}
+
+        def state_tap(step: int, carry):
+            if len(carry) == 6:
+                tr, op, ks, gb, sm, ps = carry
+            else:
+                (tr, op, ks, gb, sm), ps = carry, None
+            state = {"gbar": gb, "train": tr, "opt": op, "keys": ks}
+            if sm is not None:
+                state["server_m"] = sm
+            if ps is not None:
+                state["part"] = ps
+            p = path.format(step=step) if "{step}" in path else path
+            save_checkpoint(p, state, step=step, meta=meta)
+
+        return state_tap
+
     def run_rounds(self, n: int, block_size: int = 1, tap=None,
-                   participation=None) -> List[dict]:
+                   participation=None, checkpoint_path: str = None,
+                   checkpoint_every: int = 0) -> List[dict]:
         """Run ``n`` rounds; with ``block_size`` M > 1, rounds execute as
         fused M-round blocks (``engine.run_block``): ONE donated dispatch
         and one host sync per block instead of per round.  Dispatch is
@@ -903,8 +1146,22 @@ class Federation(SequentialFederation):
         ``participation`` (a ``ParticipationPlan`` or strategy string)
         samples a reporting cohort per round on device; the sampler state
         rides the block carry and the checkpoint.  ``None`` / ``"full"``
-        is routed onto the unchanged legacy path (bit-identical)."""
+        is routed onto the unchanged legacy path (bit-identical).
+
+        ``checkpoint_path`` + ``checkpoint_every`` arm the IN-BLOCK
+        checkpoint tap (block mode): the full block carry streams to a
+        ``restore()``-compatible checkpoint every ``checkpoint_every``
+        rounds FROM INSIDE the fused scan, so killing the process
+        mid-block loses < checkpoint_every rounds (< M without it losing
+        the whole block).  The step recorded is the absolute round count,
+        so a resumed driver knows how many rounds remain."""
         plan = part_mod.normalize(participation)
+        state_tap, every = None, 0
+        if checkpoint_path is not None and block_size > 1:
+            if plan is not None:
+                self._ensure_participation(plan)
+            state_tap = self._make_state_tap(checkpoint_path)
+            every = max(1, checkpoint_every)
         if plan is None:
             if block_size <= 1:
                 return [self.run_round() for _ in range(n)]
@@ -915,7 +1172,10 @@ class Federation(SequentialFederation):
                          self._server_m)
                 (self._trains, self._opts, self._keys, self.gbar,
                  self._server_m), metrics = self.engine.run_block(
-                    state, m, statics=self._staticss, tap=tap)
+                    state, m, statics=self._staticss, tap=tap,
+                    state_tap=state_tap,
+                    state_tap_every=min(every, m) if state_tap else 0,
+                    round_offset=len(self.history) + done)
                 pending.append((m, metrics))
                 done += m
         else:
@@ -929,15 +1189,18 @@ class Federation(SequentialFederation):
                          self._server_m, self._part_state)
                 (self._trains, self._opts, self._keys, self.gbar,
                  self._server_m, self._part_state), metrics = \
-                    self.engine.run_block(state, m, statics=self._staticss,
-                                          tap=tap, plan=plan)
+                    self.engine.run_block(
+                        state, m, statics=self._staticss, tap=tap,
+                        plan=plan, state_tap=state_tap,
+                        state_tap_every=min(every, m) if state_tap else 0,
+                        round_offset=len(self.history) + done)
                 pending.append((m, metrics))
                 done += m
         self._views_stale = True
         recs = [self._metrics_record(metrics, r)
                 for m, metrics in pending for r in range(m)]
         self.history.extend(recs)
-        if tap is not None:
+        if tap is not None or state_tap is not None:
             # metric readback does not wait for the io_callback thread;
             # drain it so every round's tap has fired before returning
             jax.effects_barrier()
@@ -1027,7 +1290,7 @@ class Federation(SequentialFederation):
             # resumes the cohort stream without the caller re-passing the
             # plan (run_rounds with the same plan keeps the state)
             self._part_plan = plan
-            self._part_state = part_mod.init_state(plan, self.fed.n_nodes)
+            self._part_state = self._init_part_state(plan)
         else:
             # a full-participation checkpoint must also restore INTO a
             # federation that previously ran with a plan: drop the stale

@@ -27,7 +27,29 @@ round and tolerate dropouts/stragglers, so the engine threads a
     varies per round, so execution falls back to the masked path (all K
     compute, non-reporters' state carried through untouched);
   - **nodes** — a fixed explicit cohort (deterministic stragglers /
-    partial-deployment configs; also the oracle-equivalence test hook).
+    partial-deployment configs; also the oracle-equivalence test hook);
+  - **async** — the FedBuff-style asynchronous regime: every node runs a
+    deterministic on-device *lag-and-failure simulator* from the carried
+    RNG.  An idle node starts a round of local work (unless it crashed,
+    ``crash_rate``/``rejoin_rate`` Markov chain, or transiently fails to
+    report, ``transient_rate``); its finished report — shipped side-car
+    values, anchor Gram panel, LAP precision — lands in a carried REPORT
+    BUFFER with a lag drawn from ``lag_dist`` (fixed ``lag`` rounds, or
+    geometric with parameter ``lag_p``, capped at ``max_lag``).  The
+    server each round applies a **staleness-weighted precision average**
+    over exactly the reports whose lag expires that round (weight
+    ``p_k * f(lag_k)`` with ``staleness='poly'``
+    ``(1+lag)^-staleness_alpha`` or a ``'cutoff'`` bounded-staleness
+    schedule; ``max_staleness`` additionally hard-gates either), and the
+    Gram/CKA consensus averages only fresh-enough reports.  A node whose
+    report is in flight is busy (it does not start new work until the
+    report lands); a crash loses the in-flight report.  A **quarantine
+    guard** checks every report ON DEVICE before it enters the buffer:
+    non-finite values or a shipped-side-car norm above
+    ``quarantine_norm`` zero the report's contribution and bump a
+    per-node quarantine counter instead of poisoning the global model.
+    ``poison_nodes`` is the fault injector: those nodes' uplinks are
+    corrupted to NaN every round (the guard must catch all of them).
 
 Sampling runs ON DEVICE from the carried sampler state (an RNG key, plus
 precision estimates for ``precision``), so it composes with the fused
@@ -54,7 +76,10 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
-STRATEGIES = ("full", "uniform", "precision", "dropout", "nodes")
+STRATEGIES = ("full", "uniform", "precision", "dropout", "nodes", "async")
+
+LAG_DISTS = ("fixed", "geometric")
+STALENESS_SCHEDULES = ("poly", "cutoff")
 
 
 @dataclass(frozen=True)
@@ -69,6 +94,20 @@ class ParticipationPlan:
     nodes: Tuple[int, ...] = ()                # nodes (fixed cohort)
     seed: int = 0
     compact: bool = True
+    # --- async strategy: lag distribution + failure simulator ----------
+    lag_dist: str = "fixed"                    # "fixed" | "geometric"
+    lag: int = 1                               # fixed lag, rounds
+    lag_p: float = 0.5                         # geometric success prob
+    max_lag: int = 4                           # cap on any drawn lag
+    transient_rate: float = 0.0                # per-round non-report prob
+    crash_rate: float = 0.0                    # online -> offline prob
+    rejoin_rate: float = 0.5                   # offline -> online prob
+    # --- async server step: staleness weighting + quarantine -----------
+    staleness: str = "poly"                    # "poly" | "cutoff"
+    staleness_alpha: float = 1.0               # poly exponent
+    max_staleness: Optional[int] = None        # hard gate on lag, rounds
+    quarantine_norm: float = 1e6               # report-norm guard
+    poison_nodes: Tuple[int, ...] = ()         # fault injection (NaN uplink)
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -85,6 +124,35 @@ class ParticipationPlan:
                 and not 0.0 <= self.dropout_rate < 1.0:
             raise ValueError(f"dropout_rate {self.dropout_rate} outside "
                              f"[0, 1)")
+        if self.strategy == "async":
+            if self.lag_dist not in LAG_DISTS:
+                raise ValueError(f"unknown lag_dist {self.lag_dist!r}; "
+                                 f"expected one of {LAG_DISTS}")
+            if self.staleness not in STALENESS_SCHEDULES:
+                raise ValueError(
+                    f"unknown staleness schedule {self.staleness!r}; "
+                    f"expected one of {STALENESS_SCHEDULES}")
+            if self.lag < 0 or self.max_lag < 0:
+                raise ValueError(f"lag {self.lag} / max_lag "
+                                 f"{self.max_lag} must be >= 0")
+            if self.lag_dist == "fixed" and self.lag > self.max_lag:
+                raise ValueError(f"fixed lag {self.lag} exceeds max_lag "
+                                 f"{self.max_lag}")
+            if not 0.0 < self.lag_p <= 1.0:
+                raise ValueError(f"lag_p {self.lag_p} outside (0, 1]")
+            for name in ("transient_rate", "crash_rate", "rejoin_rate"):
+                v = getattr(self, name)
+                if not 0.0 <= v <= 1.0:
+                    raise ValueError(f"{name} {v} outside [0, 1]")
+            if self.crash_rate >= 1.0:
+                raise ValueError("crash_rate 1.0 permanently kills every "
+                                 "node; use < 1.0")
+            if self.max_staleness is not None and self.max_staleness < 0:
+                raise ValueError(f"max_staleness {self.max_staleness} "
+                                 f"must be >= 0")
+            if self.quarantine_norm <= 0.0:
+                raise ValueError(f"quarantine_norm {self.quarantine_norm} "
+                                 f"must be > 0")
 
 
 def normalize(plan) -> Optional[ParticipationPlan]:
@@ -116,6 +184,17 @@ def init_state(plan: Optional[ParticipationPlan], n_nodes: int):
     state = {"key": jax.random.PRNGKey(plan.seed)}
     if plan.strategy == "precision":
         state["prev_p"] = jnp.ones((n_nodes,), jnp.float32)
+    if plan.strategy == "async":
+        k = n_nodes
+        # countdown: rounds until the in-flight report lands; -1 == idle
+        # (no report in flight).  lag: the drawn lag of the in-flight
+        # report (frozen at ship time, so the server can weight by it at
+        # delivery).  offline: the crash Markov-chain state.  quarantined:
+        # cumulative per-node count of reports the guard rejected.
+        state["offline"] = jnp.zeros((k,), jnp.float32)
+        state["countdown"] = jnp.full((k,), -1, jnp.int32)
+        state["lag"] = jnp.zeros((k,), jnp.int32)
+        state["quarantined"] = jnp.zeros((k,), jnp.int32)
     return state
 
 
@@ -126,49 +205,57 @@ def allocate_cohort(c: int, group_sizes) -> Tuple[int, ...]:
     states.  Deterministic: ties broken by bucket index.
 
     Every non-empty bucket is guaranteed at least one slot (requires
-    C >= number of buckets), so no node is permanently starved by a
-    zero-quota bucket — the allocation is static across rounds, which is
-    what makes the compacted shapes compile-time constants.  Within a
-    bucket, sampling is uniform; ACROSS buckets inclusion probability is
-    c_b / k_b (proportional up to the +-1 slot granularity), i.e. the
-    strategies are bucket-STRATIFIED rather than exactly uniform over all
-    C-subsets of K — the price of cohort-shaped compute.  Use ``dropout``
-    or an explicit ``nodes`` plan when exact global semantics matter."""
+    C >= number of non-empty buckets), so no node is permanently starved
+    by a zero-quota bucket — the allocation is static across rounds, which
+    is what makes the compacted shapes compile-time constants.  Empty
+    buckets (a degenerate layout some callers produce for modality sets
+    with no nodes) get zero slots rather than tripping the invariant.
+    Within a bucket, sampling is uniform; ACROSS buckets inclusion
+    probability is c_b / k_b (proportional up to the +-1 slot
+    granularity), i.e. the strategies are bucket-STRATIFIED rather than
+    exactly uniform over all C-subsets of K — the price of cohort-shaped
+    compute.  Use ``dropout`` or an explicit ``nodes`` plan when exact
+    global semantics matter."""
     k = sum(group_sizes)
-    n_groups = len(group_sizes)
+    live = [b for b, s in enumerate(group_sizes) if s > 0]
+    n_groups = len(live)
     if not 1 <= c <= k:
         raise ValueError(f"cohort_size {c} outside [1, {k}]")
     if c < n_groups:
         raise ValueError(
-            f"cohort_size {c} < {n_groups} width buckets: the static "
-            f"per-bucket allocation would permanently starve a bucket; "
-            f"use cohort_size >= {n_groups}, an explicit nodes= plan, or "
-            f"the dropout strategy")
-    # one guaranteed slot per bucket, remainder by largest-remainder on
-    # the proportional quotas of the leftover slots
+            f"cohort_size {c} < {n_groups} non-empty width buckets: the "
+            f"static per-bucket allocation would permanently starve a "
+            f"bucket; use cohort_size >= {n_groups}, an explicit nodes= "
+            f"plan, or the dropout strategy")
+    sizes = [group_sizes[b] for b in live]
+    # one guaranteed slot per non-empty bucket, remainder by
+    # largest-remainder on the proportional quotas of the leftover slots
     base = [1] * n_groups
     rest = c - n_groups
-    quotas = [rest * (s - 1) / max(k - n_groups, 1) for s in group_sizes]
-    add = [min(int(q), s - 1) for q, s in zip(quotas, group_sizes)]
+    quotas = [rest * (s - 1) / max(k - n_groups, 1) for s in sizes]
+    add = [min(int(q), s - 1) for q, s in zip(quotas, sizes)]
     rem = rest - sum(add)
     order = sorted(range(n_groups),
                    key=lambda b: (add[b] - quotas[b], b))
     for b in order:
         if rem == 0:
             break
-        room = group_sizes[b] - 1 - add[b]
+        room = sizes[b] - 1 - add[b]
         take = min(room, 1)
         add[b] += take
         rem -= take
     # any residue (buckets at capacity) goes wherever room remains
     for b in range(n_groups):
-        while rem > 0 and base[b] + add[b] < group_sizes[b]:
+        while rem > 0 and base[b] + add[b] < sizes[b]:
             add[b] += 1
             rem -= 1
     base = [b_ + a for b_, a in zip(base, add)]
     assert sum(base) == c and all(1 <= cb <= s for cb, s
-                                  in zip(base, group_sizes))
-    return tuple(base)
+                                  in zip(base, sizes))
+    out = [0] * len(group_sizes)
+    for b, cb in zip(live, base):
+        out[b] = cb
+    return tuple(out)
 
 
 def _guarded(keep: Array) -> Array:
@@ -245,6 +332,82 @@ def sample_rows(plan: ParticipationPlan, state, groups):
     return tuple(masks), tuple(rows), new_state
 
 
+def async_events(plan: ParticipationPlan, state):
+    """One round of the async lag-and-failure simulator.  Pure jax —
+    traceable inside the compiled round/block AND runnable eagerly by
+    the sequential oracle (identical event streams is the equivalence
+    contract).
+
+    All control arrays are (K,) in ENGINE ROW order and ride the carried
+    sampler state.  Per round, in order:
+
+      1. crash / rejoin: each online node goes offline with
+         ``crash_rate``; each offline node comes back with
+         ``rejoin_rate``.  A crash LOSES the in-flight report (its
+         countdown resets to idle).
+      2. transient non-report: an idle online node skips this round with
+         ``transient_rate``.
+      3. start: every idle, online, non-transient node begins a round of
+         local work and SHIPS its report with a freshly drawn lag
+         (``lag_dist``: fixed ``lag``, or geometric with success prob
+         ``lag_p``; either clipped to ``max_lag``).  Lag 0 delivers this
+         same round; lag L delivers L rounds later.  The node is busy
+         (does not start again) until its report lands.
+
+    Returns ``(start, lag_draw, new_state)`` where ``start`` is the (K,)
+    float32 0/1 mask of nodes doing local work this round, ``lag_draw``
+    is the (K,) int32 lag each starter shipped with (0 elsewhere), and
+    ``new_state`` has advanced key/offline — the caller (the engine's
+    async round body or the eager oracle) writes countdown/lag at the
+    rows that pass its quarantine guard."""
+    key, k_crash, k_rejoin, k_trans, k_lag = \
+        jax.random.split(state["key"], 5)
+    offline = state["offline"]
+    countdown = state["countdown"]
+
+    crash = jax.random.bernoulli(
+        k_crash, plan.crash_rate, offline.shape).astype(jnp.float32)
+    rejoin = jax.random.bernoulli(
+        k_rejoin, plan.rejoin_rate, offline.shape).astype(jnp.float32)
+    new_offline = jnp.where(offline > 0, 1.0 - rejoin, crash)
+    # a crash kills the in-flight report
+    countdown = jnp.where(new_offline > 0,
+                          jnp.int32(-1), countdown)
+
+    transient = jax.random.bernoulli(
+        k_trans, plan.transient_rate, offline.shape).astype(jnp.float32)
+    idle = (countdown < 0).astype(jnp.float32)
+    start = idle * (1.0 - new_offline) * (1.0 - transient)
+
+    if plan.lag_dist == "fixed":
+        lag_draw = jnp.full(offline.shape, plan.lag, jnp.int32)
+    else:
+        u = jnp.maximum(jax.random.uniform(k_lag, offline.shape), 1e-12)
+        # number of failures before first success, p = lag_p
+        lag_draw = jnp.floor(
+            jnp.log1p(-u * (1.0 - 1e-12)) /
+            jnp.log1p(-jnp.float32(min(plan.lag_p, 1.0 - 1e-7)))
+        ).astype(jnp.int32)
+    lag_draw = (jnp.clip(lag_draw, 0, plan.max_lag)
+                * start.astype(jnp.int32))
+
+    new_state = dict(state, key=key, offline=new_offline,
+                     countdown=countdown)
+    return start, lag_draw, new_state
+
+
+def poison_mask(plan: ParticipationPlan, n_nodes: int,
+                row_of_node=None) -> Array:
+    """(K,) float32 0/1 mask of fault-injected rows.  ``plan.poison_nodes``
+    names CANONICAL node ids; ``row_of_node`` maps canonical id -> engine
+    row (identity when omitted, e.g. in the sequential oracle)."""
+    m = [0.0] * n_nodes
+    for i in plan.poison_nodes:
+        r = row_of_node[i] if row_of_node is not None else i
+        m[r] = 1.0
+    return jnp.asarray(m, jnp.float32)
+
+
 def update_state(plan: ParticipationPlan, state, mask_rows: Array,
                  precisions_rows: Array):
     """Post-round sampler-state update: the ``precision`` strategy folds
@@ -265,7 +428,17 @@ def plan_meta(plan: Optional[ParticipationPlan]):
         return None
     return {"strategy": plan.strategy, "cohort_size": plan.cohort_size,
             "dropout_rate": plan.dropout_rate, "nodes": list(plan.nodes),
-            "seed": plan.seed, "compact": plan.compact}
+            "seed": plan.seed, "compact": plan.compact,
+            "lag_dist": plan.lag_dist, "lag": plan.lag,
+            "lag_p": plan.lag_p, "max_lag": plan.max_lag,
+            "transient_rate": plan.transient_rate,
+            "crash_rate": plan.crash_rate,
+            "rejoin_rate": plan.rejoin_rate,
+            "staleness": plan.staleness,
+            "staleness_alpha": plan.staleness_alpha,
+            "max_staleness": plan.max_staleness,
+            "quarantine_norm": plan.quarantine_norm,
+            "poison_nodes": list(plan.poison_nodes)}
 
 
 def plan_from_meta(meta) -> Optional[ParticipationPlan]:
@@ -274,4 +447,14 @@ def plan_from_meta(meta) -> Optional[ParticipationPlan]:
     return ParticipationPlan(
         strategy=meta["strategy"], cohort_size=meta["cohort_size"],
         dropout_rate=meta["dropout_rate"], nodes=tuple(meta["nodes"]),
-        seed=meta["seed"], compact=meta.get("compact", True))
+        seed=meta["seed"], compact=meta.get("compact", True),
+        lag_dist=meta.get("lag_dist", "fixed"), lag=meta.get("lag", 1),
+        lag_p=meta.get("lag_p", 0.5), max_lag=meta.get("max_lag", 4),
+        transient_rate=meta.get("transient_rate", 0.0),
+        crash_rate=meta.get("crash_rate", 0.0),
+        rejoin_rate=meta.get("rejoin_rate", 0.5),
+        staleness=meta.get("staleness", "poly"),
+        staleness_alpha=meta.get("staleness_alpha", 1.0),
+        max_staleness=meta.get("max_staleness"),
+        quarantine_norm=meta.get("quarantine_norm", 1e6),
+        poison_nodes=tuple(meta.get("poison_nodes", ())))

@@ -53,3 +53,48 @@ def masked_precision_weights(node_precisions: Array, mask: Array) -> Array:
     p = jnp.maximum(node_precisions.astype(jnp.float32), 0.0) \
         * mask.astype(jnp.float32)
     return p / jnp.maximum(p.sum(), 1e-12)
+
+
+def staleness_factor(lag: Array, schedule: str = "poly",
+                     alpha: float = 1.0,
+                     max_staleness: int = None) -> Array:
+    """FedBuff-style staleness discount f(lag) in [0, 1] for reports that
+    arrive ``lag`` rounds after they were computed:
+
+      - ``poly``:   (1 + lag)^-alpha  — smooth polynomial decay;
+      - ``cutoff``: 1 while lag <= max_staleness, else 0 — bounded
+        staleness (requires ``max_staleness``).
+
+    With ``poly``, ``max_staleness`` additionally hard-gates the factor
+    to zero past the bound.  Pure jax, elementwise over (K,) int lags."""
+    lag = jnp.maximum(lag.astype(jnp.float32), 0.0)
+    if schedule == "poly":
+        f = jnp.power(1.0 + lag, -float(alpha))
+    elif schedule == "cutoff":
+        if max_staleness is None:
+            raise ValueError("staleness schedule 'cutoff' needs a "
+                             "max_staleness bound")
+        f = jnp.ones_like(lag)
+    else:
+        raise ValueError(f"unknown staleness schedule {schedule!r}")
+    if max_staleness is not None:
+        f = f * (lag <= float(max_staleness)).astype(jnp.float32)
+    return f
+
+
+def stale_precision_weights(node_precisions: Array, lag: Array,
+                            mask: Array, schedule: str = "poly",
+                            alpha: float = 1.0,
+                            max_staleness: int = None) -> Array:
+    """Staleness-weighted precision averaging (the async server step):
+    weight_k = p_k * f(lag_k) over the DELIVERED reports (``mask`` (K,)
+    0/1), normalised over the delivered cohort.  A round with no
+    deliveries (or all deliveries staled out) returns all-zero weights —
+    the caller keeps the previous global value.  Reduces to
+    ``masked_precision_weights`` at lag == 0."""
+    f = staleness_factor(lag, schedule, alpha, max_staleness)
+    p = jnp.maximum(node_precisions.astype(jnp.float32), 0.0) \
+        * mask.astype(jnp.float32) * f
+    s = p.sum()
+    return jnp.where(s > 0.0, p / jnp.maximum(s, 1e-12),
+                     jnp.zeros_like(p))

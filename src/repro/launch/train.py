@@ -83,13 +83,55 @@ def main(argv=None):
                     help="server-side FedOpt momentum on the averaged "
                          "side-cars (off when unset)")
     ap.add_argument("--participation", default="full",
-                    choices=["full", "uniform", "precision", "dropout"],
-                    help="per-round cohort sampling strategy")
+                    choices=["full", "uniform", "precision", "dropout",
+                             "async"],
+                    help="per-round cohort sampling strategy ('async' "
+                         "turns on the buffered staleness-aware protocol: "
+                         "nodes report after a sampled lag, may crash and "
+                         "rejoin, and the server staleness-weights "
+                         "whatever landed this round)")
     ap.add_argument("--cohort-size", type=int, default=None,
                     help="nodes sampled per round (uniform / precision)")
     ap.add_argument("--dropout-rate", type=float, default=0.25,
                     help="per-node straggler probability (dropout)")
     ap.add_argument("--participation-seed", type=int, default=0)
+    ap.add_argument("--lag-dist", default="fixed",
+                    choices=["fixed", "geometric"],
+                    help="async: per-report lag distribution")
+    ap.add_argument("--lag", type=int, default=1,
+                    help="async: fixed lag in rounds (lag 0 = deliver "
+                         "the same round, i.e. synchronous timing)")
+    ap.add_argument("--lag-p", type=float, default=0.5,
+                    help="async: geometric lag success probability")
+    ap.add_argument("--max-lag", type=int, default=4,
+                    help="async: lag draws are clipped to this many rounds")
+    ap.add_argument("--crash-rate", type=float, default=0.0,
+                    help="async: per-round probability an online node "
+                         "crashes (losing its in-flight report)")
+    ap.add_argument("--rejoin-rate", type=float, default=0.5,
+                    help="async: per-round probability a crashed node "
+                         "rejoins")
+    ap.add_argument("--transient-rate", type=float, default=0.0,
+                    help="async: per-round probability an idle node "
+                         "transiently fails to start a report")
+    ap.add_argument("--staleness", default="poly",
+                    choices=["poly", "cutoff"],
+                    help="async: staleness schedule on report weights "
+                         "(poly: (1+lag)^-alpha; cutoff: hard drop past "
+                         "--max-staleness)")
+    ap.add_argument("--staleness-alpha", type=float, default=1.0,
+                    help="async: exponent of the poly staleness schedule")
+    ap.add_argument("--max-staleness", type=int, default=None,
+                    help="async: reports older than this many rounds get "
+                         "zero aggregation weight")
+    ap.add_argument("--quarantine-norm", type=float, default=1e6,
+                    help="async: reports with non-finite values or an "
+                         "update norm above this are quarantined (zero "
+                         "contribution, per-node counter bumped)")
+    ap.add_argument("--poison-nodes", default="",
+                    help="async fault injection: comma-separated node ids "
+                         "whose reports are corrupted to NaN on device "
+                         "(exercises the quarantine guard)")
     ap.add_argument("--warmup-rounds", type=int, default=0,
                     help="> 0 turns on warmup+cosine LR over GLOBAL "
                          "rounds (threaded through the fused-block carry)")
@@ -121,9 +163,16 @@ def main(argv=None):
     round_sched = (warmup_cosine(args.warmup_rounds, max(args.rounds, 1))
                    if args.warmup_rounds > 0 else None)
     opt = AdamW(lr=args.lr, grad_clip=1.0, round_schedule=round_sched)
+    poison = tuple(int(x) for x in args.poison_nodes.split(",") if x.strip())
     plan = part_mod.normalize(part_mod.ParticipationPlan(
         strategy=args.participation, cohort_size=args.cohort_size,
-        dropout_rate=args.dropout_rate, seed=args.participation_seed))
+        dropout_rate=args.dropout_rate, seed=args.participation_seed,
+        lag_dist=args.lag_dist, lag=args.lag, lag_p=args.lag_p,
+        max_lag=args.max_lag, crash_rate=args.crash_rate,
+        rejoin_rate=args.rejoin_rate, transient_rate=args.transient_rate,
+        staleness=args.staleness, staleness_alpha=args.staleness_alpha,
+        max_staleness=args.max_staleness,
+        quarantine_norm=args.quarantine_norm, poison_nodes=poison))
 
     anchors = jax.random.randint(jax.random.fold_in(key, 2),
                                  (args.anchors, args.seq), 0, cfg.vocab_size)
@@ -163,7 +212,10 @@ def main(argv=None):
     gbar = jnp.eye(args.anchors)
     server_m = engine.init_server_state(node_train)
 
-    part_state = part_mod.init_state(plan, k_nodes)
+    part_state = (engine.init_async_state(node_train, plan,
+                                          gram_side=args.anchors)
+                  if plan is not None and plan.strategy == "async"
+                  else part_mod.init_state(plan, k_nodes))
     streams = [iter(SyntheticLMStream(cfg.vocab_size, args.seq, args.batch,
                                       seed=100 + i)) for i in range(k_nodes)]
     up_bytes = lora_mod.param_bytes(trainable) + args.anchors ** 2 * 4
@@ -187,6 +239,10 @@ def main(argv=None):
         rnd_counter[0] += 1
         scalars, c = metrics["scalars"], cohort_of(metrics)
         cohort = f" cohort={c}/{k_nodes}" if "cohort_size" in metrics else ""
+        if "n_delivered" in metrics:
+            qs = [int(round(float(x))) for x in metrics["quarantined"]]
+            cohort += (f" delivered={float(metrics['n_delivered']):.0f}"
+                       + (f" quarantined={qs}" if any(qs) else ""))
         print(f"round {rnd}: task={float(jnp.sum(scalars['task']))/c:.4f} "
               f"geo={float(jnp.sum(scalars['geo']))/c:.4f} "
               f"xcka={float(metrics['cross_node_cka']):.3f} "

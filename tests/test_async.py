@@ -1,0 +1,317 @@
+"""Asynchronous staleness-aware federation (ISSUE 7): the on-device
+fault simulator (lag, crash-and-rejoin, transient non-report, poison),
+the buffered staleness-weighted server step, the quarantine guard, and
+in-block crash recovery.
+
+The bar: the compiled async engine matches the eager sequential oracle
+running IDENTICAL lag/failure streams (control streams exactly, numerics
+at the suite-standard sequential-vs-engine tolerance); a NaN-poisoned
+node leaves the globals finite with its quarantine counter bumped every
+round it reports; and a kill-and-resume from an in-block checkpoint tap
+is bit-identical while losing < M rounds."""
+import logging
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import participation as part_mod
+from repro.core import uncertainty as unc
+from repro.core.cka import consensus_gram
+from repro.core.engine import auto_block_size
+from repro.core.federation import (Federation, FederationConfig,
+                                   ParticipationPlan, SequentialFederation)
+
+TINY = get_config("fedmm-small").with_(
+    n_layers=1, d_model=32, n_heads=2, n_kv_heads=1, head_dim=16,
+    d_ff=64, vocab_size=128, dtype="float32")
+
+BASE2 = dict(n_nodes=2, local_steps=1, local_batch=4,
+             modalities=("genetics", "tabular"), bridge_modality="tabular",
+             anchors_per_class=2, n_tokens=4, lora_rank=4)
+
+BASE4 = dict(n_nodes=4, local_steps=2, local_batch=8,
+             modalities=("genetics", "tabular"), bridge_modality="tabular",
+             anchors_per_class=2, n_tokens=4, lora_rank=4)
+
+ASYNC_FAULTY = ParticipationPlan(
+    strategy="async", lag_dist="geometric", lag_p=0.5, max_lag=3,
+    transient_rate=0.2, crash_rate=0.1, rejoin_rate=0.5, seed=3)
+
+
+# ----------------------------------------------------------------------
+# plan / schedule units
+def test_async_plan_validation():
+    with pytest.raises(ValueError):
+        ParticipationPlan(strategy="async", lag_dist="bogus")
+    with pytest.raises(ValueError):
+        ParticipationPlan(strategy="async", staleness="bogus")
+    with pytest.raises(ValueError):
+        ParticipationPlan(strategy="async", lag=5, max_lag=3)
+    with pytest.raises(ValueError):
+        ParticipationPlan(strategy="async", crash_rate=1.0)
+    with pytest.raises(ValueError):
+        ParticipationPlan(strategy="async", quarantine_norm=0.0)
+    p = ParticipationPlan(strategy="async", max_staleness=2)
+    # async plans round-trip through checkpoint meta
+    assert part_mod.plan_from_meta(part_mod.plan_meta(p)) == p
+
+
+def test_staleness_factor_units():
+    lag = jnp.array([0.0, 1.0, 3.0])
+    poly = unc.staleness_factor(lag, schedule="poly", alpha=1.0)
+    np.testing.assert_allclose(np.asarray(poly), [1.0, 0.5, 0.25])
+    cut = unc.staleness_factor(lag, schedule="cutoff", max_staleness=1)
+    np.testing.assert_allclose(np.asarray(cut), [1.0, 1.0, 0.0])
+    # poly + bounded staleness composes: discount then hard-drop
+    both = unc.staleness_factor(lag, schedule="poly", alpha=1.0,
+                                max_staleness=1)
+    np.testing.assert_allclose(np.asarray(both), [1.0, 0.5, 0.0])
+    with pytest.raises(ValueError):
+        unc.staleness_factor(lag, schedule="cutoff")   # needs max_staleness
+
+
+def test_stale_precision_weights_normalise_and_zero():
+    prec = jnp.array([1.0, 3.0, 2.0])
+    w = unc.stale_precision_weights(prec, jnp.array([0.0, 1.0, 0.0]),
+                                    jnp.array([1.0, 1.0, 0.0]))
+    np.testing.assert_allclose(float(w.sum()), 1.0, rtol=1e-6)
+    assert float(w[2]) == 0.0                      # masked out
+    # node 1's lag halves its effective precision: its share drops below
+    # the undiscounted precision share 3/(3+1)
+    np.testing.assert_allclose(float(w[1]), 1.5 / 2.5, rtol=1e-6)
+    assert float(w[1]) < 3.0 / 4.0
+    # no deliveries -> all-zero weights, NOT NaN
+    w0 = unc.stale_precision_weights(prec, jnp.zeros(3), jnp.zeros(3))
+    np.testing.assert_array_equal(np.asarray(w0), np.zeros(3))
+
+
+def test_consensus_gram_fallback():
+    grams = jnp.stack([jnp.eye(3), 2.0 * jnp.eye(3)])
+    prev = 7.0 * jnp.eye(3)
+    got = consensus_gram(grams, mask=jnp.array([0.0, 1.0]), fallback=prev)
+    np.testing.assert_allclose(np.asarray(got), 2.0 * np.eye(3))
+    # empty mask keeps the previous consensus instead of the zero Gram
+    kept = consensus_gram(grams, mask=jnp.zeros(2), fallback=prev)
+    np.testing.assert_allclose(np.asarray(kept), 7.0 * np.eye(3))
+
+
+# ----------------------------------------------------------------------
+# degenerate inputs (ISSUE 7 satellite): allocator + auto block size
+def test_allocate_cohort_degenerate_inputs():
+    # empty bucket groups get 0 slots, non-empty ones still >= 1
+    assert part_mod.allocate_cohort(2, (0, 2, 2)) == (0, 1, 1)
+    assert part_mod.allocate_cohort(3, (4, 0)) == (3, 0)
+    # C == number of non-empty buckets -> one slot each
+    assert part_mod.allocate_cohort(2, (0, 3, 3)) == (0, 1, 1)
+    with pytest.raises(ValueError):                # C > K total nodes
+        part_mod.allocate_cohort(5, (0, 2, 2))
+    with pytest.raises(ValueError):                # C < non-empty buckets
+        part_mod.allocate_cohort(1, (0, 2, 2))
+
+
+def test_auto_block_size_degenerate_inputs():
+    # zero/negative measured round time -> cap (can't normalise)
+    assert auto_block_size(0.01, 0.0) == 64
+    assert auto_block_size(0.01, -1.0) == 64
+    # zero measured dispatch overhead -> no fusion needed
+    assert auto_block_size(0.0, 1.0) == 1
+    assert auto_block_size(-0.5, 1.0) == 1
+    # normal regime: smallest M with dispatch/M < 5% of round
+    assert auto_block_size(0.5, 1.0) == 10
+    # cap clamps absurd overhead ratios
+    assert auto_block_size(100.0, 0.001) == 64
+
+
+# ----------------------------------------------------------------------
+# delivery-timing semantics via the eager oracle (cheap: no block jit)
+def test_async_fixed_lag_delivery_timing():
+    """Fixed lag L, no failures: a node starts a report, the report lands
+    L rounds later, the node idles in between and restarts the round
+    after delivery — starts at rounds 0, L+1, 2(L+1), ..."""
+    plan = ParticipationPlan(strategy="async", lag_dist="fixed", lag=2,
+                             seed=0)
+    seq = SequentialFederation(FederationConfig(**BASE2), TINY)
+    recs = seq.run_rounds(6, participation=plan)
+    starts = [r["participation"][0] for r in recs]
+    delivered = [r["delivered"][0] for r in recs]
+    assert starts == [1.0, 0.0, 0.0, 1.0, 0.0, 0.0]
+    assert delivered == [0.0, 0.0, 1.0, 0.0, 0.0, 1.0]
+    # delivered reports carry their lag; undelivered rounds report -1
+    assert [r["staleness"][0] for r in recs] == \
+        [-1.0, -1.0, 2.0, -1.0, -1.0, 2.0]
+    # lag 0 delivers the same round: synchronous timing
+    plan0 = ParticipationPlan(strategy="async", lag_dist="fixed", lag=0,
+                              seed=0)
+    seq0 = SequentialFederation(FederationConfig(**BASE2), TINY)
+    recs0 = seq0.run_rounds(3, participation=plan0)
+    for r in recs0:
+        assert r["participation"] == [1.0, 1.0]
+        assert r["delivered"] == [1.0, 1.0]
+
+
+# ----------------------------------------------------------------------
+# compiled engine vs eager oracle under identical fault streams
+def test_async_engine_matches_sequential_oracle():
+    fed = FederationConfig(**BASE4)
+    eng = Federation(fed, TINY)
+    seq = SequentialFederation(fed, TINY)
+    he = eng.run_rounds(4, participation=ASYNC_FAULTY)
+    hs = seq.run_rounds(4, participation=ASYNC_FAULTY)
+    for a, b in zip(he, hs):
+        # control streams are EXACT: same on-device RNG, same event
+        # algebra run compiled vs eagerly
+        assert a["participation"] == b["participation"]
+        assert a["delivered"] == b["delivered"]
+        assert a["staleness"] == b["staleness"]
+        assert a["quarantined"] == b["quarantined"]
+        # numerics at the suite-standard engine-vs-sequential tolerance
+        np.testing.assert_allclose(a["task_loss"], b["task_loss"],
+                                   rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(a["weights"], b["weights"], atol=1e-4)
+        np.testing.assert_allclose(a["cross_node_cka"], b["cross_node_cka"],
+                                   rtol=1e-4, atol=1e-4)
+    for i in range(fed.n_nodes):
+        for x, y in zip(jax.tree.leaves(eng.node_params(i)),
+                        jax.tree.leaves(seq.node_params(i))):
+            if x is not None:
+                np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                           rtol=1e-4, atol=1e-4)
+
+
+def test_async_fused_blocks_match_per_round():
+    """The async carry (ctl + report buffer) rides the fused-block scan:
+    M-round blocks must reproduce the per-round path exactly."""
+    plan = ParticipationPlan(strategy="async", lag_dist="fixed", lag=1,
+                             crash_rate=0.2, rejoin_rate=0.5, seed=7)
+    fed = FederationConfig(**BASE2)
+    f1 = Federation(fed, TINY)
+    f2 = Federation(fed, TINY)
+    h1 = f1.run_rounds(4, participation=plan)
+    h2 = f2.run_rounds(4, block_size=2, participation=plan)
+    for a, b in zip(h1, h2):
+        assert a["participation"] == b["participation"]
+        assert a["delivered"] == b["delivered"]
+        np.testing.assert_allclose(a["task_loss"], b["task_loss"],
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# quarantine guard: a NaN-poisoned node cannot touch the globals
+def test_poisoned_node_quarantined_globals_finite():
+    plan = ParticipationPlan(strategy="async", lag_dist="fixed", lag=0,
+                             poison_nodes=(1,), seed=5)
+    fed = FederationConfig(**BASE2)
+    f = Federation(fed, TINY)
+    recs = f.run_rounds(4, participation=plan)
+    # always-online lag-0 poison node reports (and is quarantined) every
+    # round; the healthy node never is
+    assert recs[-1]["quarantined"] == [0.0, 4.0]
+    assert all(r["weights"][1] == 0.0 for r in recs)
+    assert np.isfinite(np.asarray(f.gbar)).all()
+    for i in range(fed.n_nodes):
+        for leaf in jax.tree.leaves(f.node_params(i)):
+            if leaf is not None:
+                assert np.isfinite(np.asarray(leaf)).all()
+    # the run still makes progress: healthy deliveries happen
+    assert sum(r["n_delivered"] for r in recs) >= 4
+
+
+# ----------------------------------------------------------------------
+# in-block checkpoint taps: preemption loses < M rounds
+def test_inblock_checkpoint_kill_and_resume_bit_identical(tmp_path):
+    """checkpoint_every=N < M streams state taps from INSIDE the compiled
+    block; killing after round 2 of a 4-round run and restoring the
+    in-block checkpoint replays rounds 3-4 bit-identically."""
+    plan = ParticipationPlan(strategy="async", lag_dist="fixed", lag=1,
+                             crash_rate=0.2, rejoin_rate=0.5, seed=7)
+    fed = FederationConfig(**BASE2)
+    ck = os.path.join(tmp_path, "ck_{step}.npz")
+    f1 = Federation(fed, TINY)
+    f1.run_rounds(4, block_size=2, participation=plan,
+                  checkpoint_path=ck, checkpoint_every=2)
+    assert sorted(os.listdir(tmp_path)) == ["ck_2.npz", "ck_4.npz"]
+
+    f2 = Federation(fed, TINY)
+    assert f2.restore(os.path.join(tmp_path, "ck_2.npz")) == 2
+    f2.run_rounds(2, block_size=2, participation=plan)
+    for x, y in zip(jax.tree.leaves((f1._trains, f1._opts, f1._keys,
+                                     f1.gbar)),
+                    jax.tree.leaves((f2._trains, f2._opts, f2._keys,
+                                     f2.gbar))):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_inblock_checkpoint_mid_block_granularity(tmp_path):
+    """checkpoint_every=1 under an M=2 block writes a checkpoint for
+    EVERY round — including the mid-block round that only an in-scan tap
+    can see."""
+    plan = ParticipationPlan(strategy="async", lag_dist="fixed", lag=1,
+                             seed=0)
+    fed = FederationConfig(**BASE2)
+    ck = os.path.join(tmp_path, "ck_{step}.npz")
+    f = Federation(fed, TINY)
+    f.run_rounds(2, block_size=2, participation=plan,
+                 checkpoint_path=ck, checkpoint_every=1)
+    assert sorted(os.listdir(tmp_path)) == ["ck_1.npz", "ck_2.npz"]
+
+
+# ----------------------------------------------------------------------
+# tap hardening (ISSUE 7 satellite): a raising tap logs and drops
+def test_raising_metric_tap_logs_and_drops(caplog):
+    fed = FederationConfig(**BASE2)
+    f = Federation(fed, TINY)
+    seen = []
+
+    def bad_tap(metrics):
+        seen.append(metrics)
+        raise RuntimeError("tap exploded")
+
+    with caplog.at_level(logging.ERROR, logger="repro.engine"):
+        recs = f.run_rounds(2, block_size=2, tap=bad_tap)
+    assert len(recs) == 2                          # run completed
+    assert len(seen) == 2                          # tap fired per round
+    assert all(np.isfinite(r["task_loss"]) for r in recs)
+    assert any("payload dropped" in r.message for r in caplog.records)
+
+
+# ----------------------------------------------------------------------
+# checkpoint corruption (ISSUE 7 satellite): clear errors, not tracebacks
+def test_checkpoint_truncated_and_bitflipped(tmp_path):
+    from repro.checkpoint import (CheckpointError, load_checkpoint,
+                                  save_checkpoint)
+    tree = {"a": jnp.arange(1024, dtype=jnp.float32),
+            "b": jnp.ones((64, 64), jnp.float32)}
+    path = os.path.join(tmp_path, "state.npz")
+    save_checkpoint(path, tree, step=3)
+    n_bytes = os.path.getsize(path)
+
+    trunc = os.path.join(tmp_path, "trunc.npz")
+    with open(path, "rb") as fh:
+        blob = fh.read()
+    with open(trunc, "wb") as fh:
+        fh.write(blob[:n_bytes // 2])
+    with pytest.raises(CheckpointError) as ei:
+        load_checkpoint(trunc, tree)
+    assert "trunc.npz" in str(ei.value)            # names the file
+    assert str(n_bytes // 2) in str(ei.value)      # and the found size
+
+    flip = os.path.join(tmp_path, "flip.npz")
+    # flip bits in the middle of the archive (leaf data, not the central
+    # directory) so np.load opens it but the member read fails CRC
+    bad = bytearray(blob)
+    for off in range(200, 2000, 80):
+        bad[off] ^= 0xFF
+    with open(flip, "wb") as fh:
+        fh.write(bytes(bad))
+    with pytest.raises((CheckpointError, ValueError)):
+        load_checkpoint(flip, tree)
+
+    # the intact file still round-trips
+    restored, step = load_checkpoint(path, tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
