@@ -1,5 +1,5 @@
 .PHONY: test bench bench-fed bench-fed-smoke bench-serve \
-	bench-serve-smoke train-smoke
+	bench-serve-smoke bench-serve-chaos train-smoke
 
 # tier-1 verification (the CI entrypoint)
 test:
@@ -31,10 +31,20 @@ bench-serve:
 # tiny-config serving smoke (the CI invocation; writes
 # BENCH_serve.smoke.json).  check_smoke fails the target if dispatches
 # or host syncs per token exceed 1/M, if a per-token sync creeps back
-# in, or if the engine diverges from the legacy-loop oracle.
+# in, if the engine diverges from the legacy-loop oracle, or if the
+# chaos/overload resilience rows regress (terminal-state accounting,
+# no poisoned token emitted, crash recovered via snapshot, shedding
+# bounding TTFT p99 under overload).
 bench-serve-smoke:
 	PYTHONPATH=src python -m benchmarks.serve_bench --smoke
 	PYTHONPATH=src python -m benchmarks.check_smoke BENCH_serve.smoke.json
+
+# re-run ONLY the resilience rows of the full serving bench (chaos
+# fault-injection + overload shedding sweeps), merging them into an
+# existing BENCH_serve.json without re-timing the throughput rows
+bench-serve-chaos:
+	PYTHONPATH=src python -m benchmarks.serve_bench --only chaos
+	PYTHONPATH=src python -m benchmarks.serve_bench --only overload
 
 train-smoke:
 	PYTHONPATH=src python -m repro.launch.train --tiny --rounds 2 \

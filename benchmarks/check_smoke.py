@@ -29,7 +29,8 @@ REQUIRED_ROWS = (
     "gram_backend_k2",
 )
 
-REQUIRED_SERVE_ROWS = ("dense_gqa", "ssm_mamba")
+REQUIRED_SERVE_ROWS = ("dense_gqa", "ssm_mamba", "chaos_dense_gqa",
+                       "overload_dense_gqa")
 
 
 class SkipCheck(Exception):
@@ -62,6 +63,68 @@ def check_serve(data: dict) -> list:
                           f"requests diverged from the legacy-loop oracle")
         if r.get("speedup", 1.0) <= 0:
             errors.append(f"{name}: nonsensical speedup {r['speedup']}")
+        if r.get("kind") == "chaos":
+            errors += check_chaos_row(r)
+        if r.get("kind") == "overload":
+            errors += check_overload_row(r)
+    return errors
+
+
+def check_chaos_row(r: dict) -> list:
+    """Resilience invariants under the seeded fault schedule, all
+    MEASURED by the bench: every request in exactly one terminal state,
+    no token derived from poisoned logits ever emitted (every stream is
+    a prefix of the clean run's), completed requests bit-identical to
+    the clean run, the guard actually fired, and the simulated crash was
+    recovered through the serve snapshot."""
+    name, errors = r["name"], []
+    if not r.get("accounting_ok", False):
+        errors.append(
+            f"{name}: terminal-state accounting broken — counts "
+            f"{r.get('counts')} do not sum to n_requests "
+            f"{r.get('n_requests')} (a request ended in zero or two "
+            f"terminal states)")
+    if not r.get("prefix_clean_ok", False):
+        errors.append(f"{name}: a poisoned/garbage token escaped into an "
+                      f"emitted stream (prefix-of-clean-run check failed)")
+    if not r.get("completed_match_clean", False):
+        errors.append(f"{name}: a completed request diverged from the "
+                      f"fault-free run")
+    if r.get("faults_detected", 0) < 1:
+        errors.append(f"{name}: NaN-poisoned schedule tripped no on-device "
+                      f"fault flag — the guard is dead")
+    if not r.get("resumed_after_crash", False):
+        errors.append(f"{name}: simulated crash was not recovered via the "
+                      f"serve snapshot")
+    return errors
+
+
+def check_overload_row(r: dict) -> list:
+    """Graceful-degradation invariants: terminal-state accounting holds
+    for every sweep, and at the highest overload factor the shedding
+    run actually shed work and held TTFT p99 at or below the
+    no-shedding baseline."""
+    name, errors = r["name"], []
+    sweeps = r.get("sweeps", {})
+    if not sweeps:
+        errors.append(f"{name}: overload row has no sweeps")
+        return errors
+    for label, sweep in sweeps.items():
+        for mode in ("noshed", "shed"):
+            if not sweep.get(mode, {}).get("accounting_ok", False):
+                errors.append(
+                    f"{name}[{label}/{mode}]: terminal-state accounting "
+                    f"broken: {sweep.get(mode, {}).get('counts')}")
+    top = max(sweeps, key=lambda k: float(k.lstrip('x')))
+    if sweeps[top]["shed"]["counts"].get("shed", 0) < 1:
+        errors.append(f"{name}[{top}]: overloaded run with deadlines shed "
+                      f"nothing — admission control is dead")
+    if not sweeps[top].get("shed_bounds_ttft_p99", False):
+        errors.append(
+            f"{name}[{top}]: shedding failed to hold TTFT p99 at or below "
+            f"the no-shedding baseline "
+            f"(shed {sweeps[top]['shed']['ttft_p99_ms']}ms vs noshed "
+            f"{sweeps[top]['noshed']['ttft_p99_ms']}ms)")
     return errors
 
 

@@ -697,9 +697,12 @@ def decode_step_slots(params: dict, cache: dict, batch: dict,
     batch), ``cache['len']`` is (S,) int32 — slot s reads/writes its
     caches at position ``len[s]``, so freshly-admitted prompts and
     long-running decodes share one batched call without recompiling.
-    ``step_mask`` (S,) bool freezes the position of inactive/stopped
-    slots (their cache writes land on a dead slot and are overwritten at
-    the next admission, so only ``len`` needs masking).
+    ``step_mask`` (S,) bool freezes masked slots IN PLACE: their cache
+    position does not advance, and recurrent state (SSM ``h``/``conv``,
+    RG-LRU) is held — attention writes at a frozen position are
+    idempotent, but a recurrent update is not, and the serving engine
+    unmasks slots that later resume (deadline-cancelled or chaos-frozen
+    slots), which must continue bit-identically.
     ``attn_backend='pallas'`` routes GQA slot attention to
     ``kernels.decode_attention`` (interpret mode off-TPU).
     """
@@ -708,6 +711,13 @@ def decode_step_slots(params: dict, cache: dict, batch: dict,
     x = params["embed"][batch["tokens"]]
     lens = cache["len"]                                  # (S,) int32
     akw = dict(backend=attn_backend, interpret=attn_interpret)
+
+    def keep(new, old):
+        """Hold recurrent state for masked slots (slot axis 0)."""
+        if step_mask is None:
+            return new
+        m = step_mask.reshape((-1,) + (1,) * (new.ndim - 1))
+        return jnp.where(m, new, old)
 
     if fam == "audio":
         x = x + sinusoidal_positions(65536, cfg.d_model)[lens][:, None] \
@@ -737,7 +747,7 @@ def decode_step_slots(params: dict, cache: dict, batch: dict,
             a = rms_norm(h, bp["ln"]["scale"], cfg.norm_eps)
             y, ns = ssm_mod.mamba_decode(bp["mixer"], a, {"h": hs, "conv": cs},
                                          cfg)
-            return h + y, (ns["h"], ns["conv"])
+            return h + y, (keep(ns["h"], hs), keep(ns["conv"], cs))
         x, (nh, nc) = jax.lax.scan(body, x,
                                    (params["blocks"], cache["h"], cache["conv"]))
         new_cache = dict(cache, h=nh, conv=nc)
@@ -750,7 +760,7 @@ def decode_step_slots(params: dict, cache: dict, batch: dict,
             y, ns = rglru_mod.rglru_decode(bp["mixer"], a, st, cfg)
             h = h + y
             m = rms_norm(h, bp["ln2"]["scale"], cfg.norm_eps)
-            return h + swiglu(bp["mlp"], m), ns
+            return h + swiglu(bp["mlp"], m), jax.tree.map(keep, ns, st)
 
         def att_step(h, bp, st):
             a = rms_norm(h, bp["ln1"]["scale"], cfg.norm_eps)

@@ -1,18 +1,25 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine with a resilience layer.
 
 Slot-stacked cache pool (:mod:`repro.serve.pool`), fused M-step decode
-blocks with on-device sampling (:mod:`repro.serve.engine`), and a tiny
-host-side FIFO scheduler (:mod:`repro.serve.scheduler`).  The legacy
-per-token loop survives as :func:`naive_generate` — the bit-identity
-oracle and the benchmark baseline.
+blocks with on-device sampling and per-slot fault guards
+(:mod:`repro.serve.engine`), a host-side FIFO scheduler with
+deadline-based load shedding and a retry lane
+(:mod:`repro.serve.scheduler`), and a deterministic chaos-injection
+harness (:mod:`repro.serve.faults`).  The legacy per-token loop survives
+as :func:`naive_generate` — the bit-identity oracle and the benchmark
+baseline.
 """
 from repro.serve.engine import ServeConfig, ServeEngine, naive_generate
+from repro.serve.faults import FaultPlan, SimulatedCrash, seeded_plan
 from repro.serve.pool import gather_slot, init_pool_cache, scatter_slot
-from repro.serve.scheduler import (FifoScheduler, Request, RequestRecord,
-                                   poisson_requests)
+from repro.serve.scheduler import (TERMINAL_STATES, FifoScheduler, Request,
+                                   RequestRecord, poisson_requests,
+                                   state_counts)
 
 __all__ = [
     "ServeConfig", "ServeEngine", "naive_generate",
+    "FaultPlan", "SimulatedCrash", "seeded_plan",
     "init_pool_cache", "scatter_slot", "gather_slot",
     "FifoScheduler", "Request", "RequestRecord", "poisson_requests",
+    "TERMINAL_STATES", "state_counts",
 ]

@@ -1,5 +1,5 @@
 """Continuous-batching decode engine: fused decode blocks over a donated
-slot-stacked cache pool.
+slot-stacked cache pool, with a resilience layer.
 
 The legacy loop (``examples/serve_decode.py``) pays one jit dispatch plus
 a blocking host readback per decoded token and head-of-line blocks the
@@ -12,7 +12,7 @@ engine's idioms to serving:
     device-resident and DONATED to the compiled step, so pool buffers
     alias across blocks like round state aliases across rounds;
   - ``M = block_steps`` decode steps are fused into one jitted
-    ``lax.scan`` (``_block_fn``): greedy/temperature sampling and
+    ``lax.scan`` (``_block_impl``): greedy/temperature sampling and
     stop-token accounting run ON DEVICE in the carry, tokens accumulate
     into an (M, S) device buffer, and the host pays exactly one dispatch
     and one readback per M tokens-per-slot — the serving analogue of
@@ -25,12 +25,43 @@ engine's idioms to serving:
     (``step_mask``): their cache writes land on a dead slot that the
     next admission overwrites, so no gather/compact is needed.
 
+Resilience (PR 8) — every guard rides the compiled block; host logic
+runs only at block boundaries, so the 1-dispatch-per-M-tokens structure
+survives every failure mode:
+
+  - ON-DEVICE OUTPUT GUARDS: per-slot fault flags carried in the scan
+    (the serving analogue of the federation quarantine guard) trip on
+    non-finite decode logits and on runaway token repetition; a tripped
+    slot is frozen on device — the faulty token is never emitted — and
+    the flag comes back in the block's single readback;
+  - HOST WATCHDOG at block boundaries: slots past their completion
+    deadline are cancelled via a ``cancel`` mask folded into the next
+    block dispatch (``timed_out``), and slots making no progress for
+    ``stall_blocks`` consecutive blocks are reclaimed as stuck;
+  - RETRY WITH BACKOFF: faulted/stuck requests requeue through the
+    scheduler's retry lane (re-prefilled from the prompt) up to
+    ``max_attempts`` admissions, then land in the terminal ``failed``
+    state;
+  - ADMISSION CONTROL: the scheduler sheds queued requests past their
+    TTFT deadline and beyond ``queue_cap`` at every boundary, bounding
+    queue latency under overload (see ``serve.scheduler``);
+  - SNAPSHOT/RESUME: ``snapshot()`` serialises the whole device state
+    (cache pool, per-slot positions and budgets, RNG key, fault flags,
+    global step counter) through ``repro.checkpoint`` with the
+    scheduler in the JSON meta; ``ServeEngine.resume`` + a
+    ``resume_serve()`` call continue a killed stream, bit-identical for
+    already-admitted slots;
+  - CHAOS: ``serve(fault_plan=...)`` injects a deterministic seeded
+    fault schedule (``serve.faults``) — NaN-poisoned logits, silent
+    slot freezes, host delays, and a simulated mid-stream crash.
+
 ``naive_generate`` keeps the legacy per-token loop alive as the oracle
 and the benchmark baseline: one dispatch + one blocking argmax readback
 per token, batches run head-of-line until every member finishes.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
 from functools import partial
@@ -40,8 +71,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import load_checkpoint, read_meta, save_checkpoint
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
+from repro.serve import faults as F
 from repro.serve.pool import init_pool_cache, scatter_slot
 from repro.serve.scheduler import FifoScheduler, Request, RequestRecord
 
@@ -55,7 +88,25 @@ class ServeConfig:
     ``stop_token < 0`` disables early stopping.  ``temperature == 0`` is
     greedy.  ``attn_backend``: 'reference' (blockwise jnp), 'pallas'
     (``kernels.decode_attention``; interpret mode off-TPU), or 'auto'
-    (pallas on TPU, reference elsewhere)."""
+    (pallas on TPU, reference elsewhere).
+
+    SLO / resilience knobs (None / 0 disables each):
+
+    - ``queue_cap``: max arrived-but-unadmitted requests held; newest
+      beyond the cap are shed at block boundaries (bounded queue).
+    - ``ttft_deadline_s`` / ``deadline_s``: default first-token and
+      completion deadlines relative to arrival (per-request fields on
+      ``Request`` override them).
+    - ``max_attempts``: admissions per request before a faulted/stuck
+      request becomes terminal ``failed``; ``retry_backoff_s`` delays
+      each re-admission.
+    - ``stall_blocks``: consecutive zero-progress blocks before the
+      watchdog reclaims a slot as stuck (0 = watchdog off).
+    - ``guard_nonfinite``: trip the on-device fault flag on non-finite
+      decode logits instead of emitting a garbage token.
+    - ``max_repeat``: trip the fault flag after this many CONSECUTIVE
+      identical tokens from one slot (0 = off).
+    """
     n_slots: int = 8
     cache_len: int = 128
     block_steps: int = 8
@@ -64,6 +115,14 @@ class ServeConfig:
     temperature: float = 0.0
     seed: int = 0
     attn_backend: str = "reference"
+    queue_cap: Optional[int] = None
+    ttft_deadline_s: Optional[float] = None
+    deadline_s: Optional[float] = None
+    max_attempts: int = 2
+    retry_backoff_s: float = 0.0
+    stall_blocks: int = 0
+    guard_nonfinite: bool = True
+    max_repeat: int = 0
 
 
 def _resolve_backend(name: str):
@@ -84,6 +143,8 @@ class ServeEngine:
         eng = ServeEngine(params, cfg, ServeConfig(n_slots=8))
         records = eng.serve(requests)        # scheduler.Request list
         records[rid].tokens                  # generated ids, stop incl.
+        records[rid].state                   # terminal state (see
+                                             # scheduler.TERMINAL_STATES)
 
     ``eng.stats`` counts compiled-call dispatches and blocking host
     readbacks by kind; the benchmark derives dispatches-per-token and
@@ -92,6 +153,9 @@ class ServeEngine:
 
     def __init__(self, params, cfg: ModelConfig, scfg: ServeConfig,
                  rt: Optional[T.Runtime] = None):
+        if scfg.n_slots <= 0:
+            raise ValueError(f"n_slots must be positive, got "
+                             f"{scfg.n_slots}")
         if cfg.sliding_window:
             eff = min(scfg.cache_len, cfg.sliding_window)
             if eff < cfg.sliding_window:
@@ -105,11 +169,14 @@ class ServeEngine:
         self.rt = rt or T.Runtime()
         self._backend, self._interpret = _resolve_backend(scfg.attn_backend)
         self.state = self._init_state()
-        self._block = jax.jit(self._block_impl, donate_argnums=(1,))
+        self._block_fns: Dict[Optional[F.FaultPlan], callable] = {}
         self._admit = jax.jit(self._admit_impl, donate_argnums=(1,))
+        self._resume_sched: Optional[FifoScheduler] = None
+        self._blocks_done = 0
         self.stats = {"block_dispatches": 0, "block_syncs": 0,
                       "block_tokens": 0, "admit_dispatches": 0,
-                      "request_reads": 0}
+                      "request_reads": 0, "faults_detected": 0,
+                      "stalls_detected": 0, "snapshot_writes": 0}
 
     # ------------------------------------------------------------------
     def _init_state(self) -> dict:
@@ -123,6 +190,12 @@ class ServeEngine:
             "n_emitted": jnp.zeros((s,), jnp.int32),
             "max_new": jnp.full((s,), self.scfg.max_new_tokens, jnp.int32),
             "key": jax.random.PRNGKey(self.scfg.seed),
+            # resilience carry: per-slot fault flags (the serving
+            # quarantine guard), consecutive-repeat run lengths, and the
+            # GLOBAL decode-step counter the chaos schedule indexes
+            "fault": jnp.zeros((s,), bool),
+            "rep_run": jnp.zeros((s,), jnp.int32),
+            "t": jnp.zeros((), jnp.int32),
         }
 
     def _sample(self, logits: Array, key: Array) -> Array:
@@ -139,13 +212,19 @@ class ServeEngine:
         """Prefill + first-token sampling + slot scatter, fused into ONE
         compiled call per admission (compiled once per prompt length).
         The first token lands in ``last_tok[slot]``; the host reads it
-        lazily — admission costs zero blocking syncs."""
+        lazily — admission costs zero blocking syncs.  The slot's fault
+        flag and repeat counter reset here; non-finite PREFILL logits
+        set the flag immediately so the first block boundary retries
+        instead of streaming garbage."""
         logits, req_cache = T.prefill(params, batch, self.cfg, self.rt,
                                       cache_len=self.scfg.cache_len)
-        first = self._sample(logits[:, -1, :], key)[0]
+        last = logits[:, -1, :]
+        first = self._sample(last, key)[0]
         stop = self.scfg.stop_token
-        first_stopped = (max_new <= 1) | (first == stop if stop >= 0
-                                          else False)
+        bad0 = (~jnp.isfinite(last.astype(jnp.float32)).all()
+                if self.scfg.guard_nonfinite else jnp.asarray(False))
+        first_stopped = bad0 | (max_new <= 1) | (first == stop if stop >= 0
+                                                 else False)
         cache = scatter_slot(state["cache"], req_cache, slot)
         return dict(
             state,
@@ -155,33 +234,71 @@ class ServeEngine:
             last_tok=state["last_tok"].at[slot, 0].set(first),
             n_emitted=state["n_emitted"].at[slot].set(1),
             max_new=state["max_new"].at[slot].set(max_new),
+            fault=state["fault"].at[slot].set(bad0),
+            rep_run=state["rep_run"].at[slot].set(0),
         )
 
-    def _block_impl(self, params, state: dict):
-        """M fused decode steps: sampling + stop accounting in the scan
-        carry; one (M, S) token buffer comes back per dispatch."""
+    def _block_impl(self, plan: Optional[F.FaultPlan], params, state: dict,
+                    cancel: Array):
+        """M fused decode steps: sampling, stop accounting, and the
+        output guards all in the scan carry; one (M, S) token buffer
+        comes back per dispatch.  ``cancel`` (S,) bool freezes
+        deadline-expired slots on device without an extra dispatch.
+        ``plan`` is a STATIC chaos schedule (None = clean)."""
         stop = self.scfg.stop_token
+        max_rep = self.scfg.max_repeat
+        n_slots = self.scfg.n_slots
+        state = dict(state, stopped=state["stopped"] | cancel)
 
         def step(st, _):
             running = st["active"] & ~st["stopped"]
+            frozen = F.freeze_mask(plan, st["t"], n_slots)
+            if frozen is not None:
+                running = running & ~frozen
             logits, cache = T.decode_step_slots(
                 params, st["cache"], {"tokens": st["last_tok"]}, self.cfg,
                 self.rt, step_mask=running, attn_backend=self._backend,
                 attn_interpret=self._interpret)
+            lg = F.poison_logits(plan, st["t"], logits[:, 0, :])
             key, sub = jax.random.split(st["key"])
-            tok = self._sample(logits[:, 0, :], sub)
-            tok = jnp.where(running, tok, st["last_tok"][:, 0])
-            n_emitted = st["n_emitted"] + running.astype(jnp.int32)
-            hit_stop = (tok == stop) if stop >= 0 else jnp.zeros_like(running)
+            tok = self._sample(lg, sub)
+            # output guards: a tripped slot freezes and its token is
+            # never emitted — the host retries from the prompt instead
+            if self.scfg.guard_nonfinite:
+                bad = running & ~jnp.isfinite(
+                    lg.astype(jnp.float32)).all(axis=-1)
+            else:
+                bad = jnp.zeros_like(running)
+            ok = running & ~bad
+            same = tok == st["last_tok"][:, 0]
+            rep_run = jnp.where(ok, jnp.where(same, st["rep_run"] + 1, 0),
+                                st["rep_run"])
+            if max_rep > 0:
+                bad = bad | (ok & (rep_run >= max_rep))
+            good = running & ~bad
+            tok = jnp.where(good, tok, st["last_tok"][:, 0])
+            n_emitted = st["n_emitted"] + good.astype(jnp.int32)
+            hit_stop = (tok == stop) if stop >= 0 else jnp.zeros_like(good)
             exhausted = n_emitted >= st["max_new"]
-            stopped = st["stopped"] | (running & (hit_stop | exhausted))
+            stopped = st["stopped"] | (good & (hit_stop | exhausted)) | bad
             st = dict(st, cache=cache, last_tok=tok[:, None],
-                      n_emitted=n_emitted, stopped=stopped, key=key)
-            return st, (tok, running)
+                      n_emitted=n_emitted, stopped=stopped, key=key,
+                      fault=st["fault"] | bad, rep_run=rep_run,
+                      t=st["t"] + 1)
+            return st, (tok, good)
 
         state, (toks, emitted) = jax.lax.scan(
             step, state, None, length=self.scfg.block_steps)
         return state, toks, emitted
+
+    def _get_block(self, plan: Optional[F.FaultPlan]):
+        """One compilation per distinct device-visible fault schedule;
+        host-only plans (delays/crash) share the clean compilation."""
+        key = None if plan is None or plan.device_silent else plan
+        if key not in self._block_fns:
+            self._block_fns[key] = jax.jit(
+                partial(self._block_impl, key), donate_argnums=(1,))
+        return self._block_fns[key]
 
     # ------------------------------------------------------------------
     def _admit_request(self, req: Request, rec: RequestRecord,
@@ -209,8 +326,10 @@ class ServeEngine:
             self.stats["request_reads"] += 1
             rec.first_token_s = now()
 
-    def serve(self, requests: List[Request], *,
-              sync_ttft: bool = False) -> Dict[int, RequestRecord]:
+    def serve(self, requests: List[Request], *, sync_ttft: bool = False,
+              fault_plan: Optional[F.FaultPlan] = None,
+              snapshot_path: Optional[str] = None,
+              snapshot_every_blocks: int = 0) -> Dict[int, RequestRecord]:
         """Run a request stream to completion with continuous batching.
 
         Admission happens between decode blocks: arrived requests fill
@@ -219,17 +338,60 @@ class ServeEngine:
         host sync in the decode path.  With ``sync_ttft`` the engine
         additionally blocks on each request's first token to timestamp
         TTFT (a per-REQUEST sync, used by the latency benchmark).
+
+        ``fault_plan`` injects the chaos schedule (``serve.faults``);
+        ``snapshot_path`` + ``snapshot_every_blocks=N`` write a
+        restore-compatible serve snapshot every N blocks, so a crash —
+        real or simulated — loses at most N blocks of decode work.
         """
         scfg = self.scfg
-        sched = FifoScheduler(requests, scfg.n_slots)
+        sched = FifoScheduler(requests, scfg.n_slots,
+                              queue_cap=scfg.queue_cap,
+                              ttft_deadline_s=scfg.ttft_deadline_s,
+                              deadline_s=scfg.deadline_s)
+        self._blocks_done = 0        # block indices are per-stream; only
+        # resume_serve continues a restored counter (chaos schedules and
+        # snapshot steps index it)
+        return self._run(sched, sync_ttft=sync_ttft, fault_plan=fault_plan,
+                         snapshot_path=snapshot_path,
+                         snapshot_every_blocks=snapshot_every_blocks)
+
+    def resume_serve(self, *, sync_ttft: bool = False,
+                     fault_plan: Optional[F.FaultPlan] = None,
+                     snapshot_path: Optional[str] = None,
+                     snapshot_every_blocks: int = 0
+                     ) -> Dict[int, RequestRecord]:
+        """Continue the stream restored by :meth:`resume`: unfinished
+        requests run to a terminal state (already-admitted slots resume
+        bit-identically from the snapshot's device state).  Wall-clock
+        SLO timestamps restart from the resume instant — crash recovery
+        prioritises completing work over latency bookkeeping."""
+        if self._resume_sched is None:
+            raise RuntimeError("no restored stream: construct the engine "
+                               "with ServeEngine.resume(path, ...) first")
+        sched, self._resume_sched = self._resume_sched, None
+        return self._run(sched, sync_ttft=sync_ttft, fault_plan=fault_plan,
+                         snapshot_path=snapshot_path,
+                         snapshot_every_blocks=snapshot_every_blocks)
+
+    def _run(self, sched: FifoScheduler, *, sync_ttft: bool,
+             fault_plan: Optional[F.FaultPlan],
+             snapshot_path: Optional[str],
+             snapshot_every_blocks: int) -> Dict[int, RequestRecord]:
+        scfg = self.scfg
+        block = self._get_block(fault_plan)
+        self._sched = sched
+        stall = [0] * scfg.n_slots
         t0 = time.perf_counter()
 
         def now():
             return time.perf_counter() - t0
 
         while not sched.done:
+            sched.shed_expired(now())
             while sched.admissible(now()):
                 req, slot = sched.pop(now())
+                stall[slot] = 0
                 self._admit_request(req, sched.records[req.rid],
                                     sync_ttft, now)
                 # a request that stops at its first token never decodes
@@ -241,32 +403,130 @@ class ServeEngine:
             busy = [s for s, rid in enumerate(sched.slot_rid)
                     if rid is not None]
             if not busy:
-                na = sched.next_arrival()
-                if na is None:
+                nr = sched.next_ready()
+                if nr is None:
                     break
-                wait = na - now()
+                wait = nr - now()
                 if wait > 0:
                     time.sleep(wait)
                 continue
-            self.state, toks, emitted = self._block(self.params, self.state)
+            if (fault_plan is not None and fault_plan.delay_s > 0
+                    and self._blocks_done in fault_plan.delay_blocks):
+                time.sleep(fault_plan.delay_s)
+            # watchdog, part 1: deadline-expired slots are cancelled ON
+            # DEVICE by the block dispatch itself (no extra dispatch)
+            cancel = np.zeros((scfg.n_slots,), bool)
+            t_check = now()
+            for s in busy:
+                if t_check > sched.abs_deadline(sched.slot_rid[s]):
+                    cancel[s] = True
+            self.state, toks, emitted = block(self.params, self.state,
+                                              jnp.asarray(cancel))
             self.stats["block_dispatches"] += 1
-            # ONE readback per block: tokens, emission mask, stop flags
-            toks_h, emitted_h, stopped_h = jax.device_get(
-                (toks, emitted, self.state["stopped"]))
+            # ONE readback per block: tokens, emission mask, stop and
+            # fault flags
+            toks_h, emitted_h, stopped_h, fault_h = jax.device_get(
+                (toks, emitted, self.state["stopped"],
+                 self.state["fault"]))
             self.stats["block_syncs"] += 1
             t_block = now()
             for s in busy:
                 rec = sched.records[sched.slot_rid[s]]
+                if cancel[s]:
+                    sched.release(s, t_block, state="timed_out")
+                    continue
                 new = toks_h[emitted_h[:, s], s]
                 rec.tokens.extend(int(t) for t in new)
                 self.stats["block_tokens"] += int(emitted_h[:, s].sum())
-                if rec.first_token_s is None:
+                if rec.first_token_s is None and len(rec.tokens) > 0:
                     rec.first_token_s = t_block
-                if stopped_h[s]:
+                if fault_h[s]:
+                    rec.faults += 1
+                    self.stats["faults_detected"] += 1
+                    self._retry_or_fail(sched, s, t_block)
+                elif stopped_h[s]:
                     sched.release(s, t_block)
+                elif scfg.stall_blocks > 0 and not emitted_h[:, s].any():
+                    # watchdog, part 2: a live slot that emitted nothing
+                    stall[s] += 1
+                    if stall[s] >= scfg.stall_blocks:
+                        stall[s] = 0
+                        self.stats["stalls_detected"] += 1
+                        self._retry_or_fail(sched, s, t_block)
+                else:
+                    stall[s] = 0
+            self._blocks_done += 1
+            if (snapshot_path and snapshot_every_blocks > 0
+                    and self._blocks_done % snapshot_every_blocks == 0):
+                self.snapshot(snapshot_path, sched)
+            if (fault_plan is not None
+                    and fault_plan.crash_after_block >= 0
+                    and self._blocks_done - 1
+                    == fault_plan.crash_after_block):
+                raise F.SimulatedCrash(
+                    f"fault plan killed the engine after block "
+                    f"{fault_plan.crash_after_block}"
+                    + (f"; resume from {snapshot_path!r}"
+                       if snapshot_path else ""))
         for rec in sched.records.values():      # resolve lazy first tokens
             rec.tokens = [int(t) for t in rec.tokens]
         return sched.records
+
+    def _retry_or_fail(self, sched: FifoScheduler, slot: int,
+                       now_s: float) -> None:
+        """Reclaim a faulted/stuck slot: requeue with backoff while the
+        attempt budget lasts, else terminal ``failed``."""
+        rid = sched.slot_rid[slot]
+        if sched.records[rid].attempts < self.scfg.max_attempts:
+            sched.requeue(slot, now_s + self.scfg.retry_backoff_s)
+        else:
+            sched.release(slot, now_s, state="failed")
+
+    # ----------------------------------------------------- persistence
+    def snapshot(self, path: str,
+                 sched: Optional[FifoScheduler] = None) -> None:
+        """Serialise the full serve state through ``repro.checkpoint``:
+        the device pool (cache, per-slot positions, budgets, RNG key,
+        fault flags, global step counter) as the checkpoint tree and the
+        scheduler + ``ServeConfig`` in the JSON meta.  Atomic like every
+        checkpoint write; a crash mid-save never corrupts the previous
+        snapshot."""
+        sched = sched if sched is not None else self._sched
+        for rec in sched.records.values():      # resolve lazy device scalars
+            rec.tokens = [int(t) for t in rec.tokens]
+        meta = {
+            "kind": "serve_snapshot",
+            "serve_config": dataclasses.asdict(self.scfg),
+            "model_family": self.cfg.family,
+            "scheduler": sched.to_meta(),
+            "blocks_done": self._blocks_done,
+        }
+        save_checkpoint(path, jax.device_get(self.state),
+                        step=self._blocks_done, meta=meta)
+        self.stats["snapshot_writes"] += 1
+
+    @classmethod
+    def resume(cls, path: str, params, cfg: ModelConfig,
+               rt: Optional[T.Runtime] = None) -> "ServeEngine":
+        """Rebuild an engine from a serve snapshot (``CheckpointError``
+        on a truncated/corrupt file, ``ValueError`` on a snapshot from a
+        different serve/model configuration).  Follow with
+        :meth:`resume_serve` to run the restored stream to completion."""
+        meta = read_meta(path)
+        if meta.get("kind") != "serve_snapshot":
+            raise ValueError(f"{path!r} is not a serve snapshot "
+                             f"(kind={meta.get('kind')!r})")
+        if meta["model_family"] != cfg.family:
+            raise ValueError(
+                f"snapshot {path!r} was taken from a {meta['model_family']!r}"
+                f" model, cannot restore into {cfg.family!r}")
+        scfg = ServeConfig(**meta["serve_config"])
+        eng = cls(params, cfg, scfg, rt)
+        state, step = load_checkpoint(path, eng.state)
+        eng.state = state
+        eng._blocks_done = int(step)
+        eng._resume_sched = FifoScheduler.from_meta(meta["scheduler"])
+        return eng
 
 
 # ======================================================================
@@ -352,4 +612,5 @@ def naive_generate(params, cfg: ModelConfig, requests: List[Request],
         for j, r in enumerate(group):
             records[r.rid].tokens = outs[j]
             records[r.rid].finished_s = t_done
+            records[r.rid].state = "completed"
     return records

@@ -1,0 +1,139 @@
+"""Deterministic chaos-injection harness for the serving engine.
+
+A :class:`FaultPlan` is a STATIC, seeded fault schedule baked into the
+compiled decode block (the plan's tuples are trace-time constants, so
+each distinct plan compiles once and replays bit-identically):
+
+  - ``nan_steps`` poisons the decode logits of the chosen slots with NaN
+    on the chosen GLOBAL decode-step indices — the engine carries a
+    step counter ``t`` in the scan, so the schedule is deterministic
+    across blocks, retries, and even a snapshot/resume (``t`` rides the
+    checkpoint);
+  - ``force_steps`` biases the logits so one fixed token wins — finite
+    values, so the non-finite guard stays silent and only the
+    runaway-repetition guard can catch it;
+  - ``freeze_steps`` silently halts the chosen slots (no token emitted,
+    no cache advance, NOT stopped) — the device-side "stuck slot" the
+    host watchdog must notice, complementing ``delay_blocks``;
+  - ``delay_blocks`` + ``delay_s`` sleep the HOST before dispatching the
+    chosen block indices (slow-host / slow-interconnect simulation);
+  - ``crash_after_block`` raises :class:`SimulatedCrash` after the
+    results of that block index have been consumed (and after any due
+    snapshot), simulating an engine process dying mid-stream.
+
+Everything device-side rides the fused block: injection is a masked
+``where`` on the logits / run mask inside the scan, so the chaos path
+keeps the one-dispatch-per-M-tokens structure it is trying to break.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class SimulatedCrash(RuntimeError):
+    """The fault plan killed the engine mid-stream.  The serve loop has
+    already written any due snapshot; recover with
+    ``ServeEngine.resume(path, ...)`` + ``resume_serve()``."""
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Seeded fault schedule.  Step fields index the engine's GLOBAL
+    decode-step counter; block fields index dispatched decode blocks
+    within one serve run.  Empty slot tuples mean "every slot"."""
+    nan_steps: Tuple[int, ...] = ()
+    nan_slots: Tuple[int, ...] = ()
+    force_steps: Tuple[int, ...] = ()
+    force_slots: Tuple[int, ...] = ()
+    force_token: int = 0
+    freeze_steps: Tuple[int, ...] = ()
+    freeze_slots: Tuple[int, ...] = ()
+    delay_blocks: Tuple[int, ...] = ()
+    delay_s: float = 0.0
+    crash_after_block: int = -1
+
+    @property
+    def device_silent(self) -> bool:
+        """True when the plan injects nothing into the compiled block
+        (host-side delays/crash only) — the engine then reuses the
+        fault-free compilation."""
+        return not (self.nan_steps or self.force_steps or self.freeze_steps)
+
+
+def seeded_plan(seed: int, *, n_steps: int, n_slots: int,
+                nan_rate: float = 0.0, freeze_rate: float = 0.0,
+                freeze_span: int = 2, delay_rate: float = 0.0,
+                delay_s: float = 0.0,
+                crash_after_block: int = -1) -> FaultPlan:
+    """A deterministic seeded schedule over ``n_steps`` decode steps:
+    each step is NaN-poisoned with ``nan_rate`` (one victim slot drawn
+    per event), starts a ``freeze_span``-step freeze with
+    ``freeze_rate``, and each block is host-delayed with
+    ``delay_rate``."""
+    rng = random.Random(seed)
+    nan_steps, nan_slots = [], set()
+    freeze_steps = []
+    for t in range(n_steps):
+        if nan_rate > 0 and rng.random() < nan_rate:
+            nan_steps.append(t)
+            nan_slots.add(rng.randrange(n_slots))
+        if freeze_rate > 0 and rng.random() < freeze_rate:
+            freeze_steps.extend(range(t, t + freeze_span))
+    delay_blocks = tuple(b for b in range(max(1, n_steps))
+                         if delay_rate > 0 and rng.random() < delay_rate)
+    return FaultPlan(
+        nan_steps=tuple(nan_steps), nan_slots=tuple(sorted(nan_slots)),
+        freeze_steps=tuple(sorted(set(freeze_steps))),
+        freeze_slots=tuple(sorted(nan_slots)) or (0,),
+        delay_blocks=delay_blocks, delay_s=delay_s,
+        crash_after_block=crash_after_block)
+
+
+# ----------------------------------------------------------- tracing
+def _step_hit(t: Array, steps: Tuple[int, ...]) -> Array:
+    """() bool: is the traced global step ``t`` in the static tuple?"""
+    return (t == jnp.asarray(steps, jnp.int32)).any()
+
+
+def _slot_mask(slots: Tuple[int, ...], n_slots: int) -> Array:
+    if not slots:
+        return jnp.ones((n_slots,), bool)
+    return jnp.zeros((n_slots,), bool).at[jnp.asarray(slots)].set(True)
+
+
+def poison_logits(plan: Optional[FaultPlan], t: Array,
+                  logits: Array) -> Array:
+    """Apply the plan's logit faults at global step ``t`` to (S, V)
+    decode logits (identity when the plan is silent)."""
+    if plan is None:
+        return logits
+    s = logits.shape[0]
+    if plan.nan_steps:
+        mask = _step_hit(t, plan.nan_steps) & _slot_mask(plan.nan_slots, s)
+        logits = jnp.where(mask[:, None], jnp.nan, logits)
+    if plan.force_steps:
+        mask = _step_hit(t, plan.force_steps) \
+            & _slot_mask(plan.force_slots, s)
+        forced = jnp.where(
+            jnp.arange(logits.shape[-1]) == plan.force_token,
+            jnp.asarray(1e9, logits.dtype), jnp.asarray(-1e9, logits.dtype))
+        logits = jnp.where(mask[:, None], forced, logits)
+    return logits
+
+
+def freeze_mask(plan: Optional[FaultPlan], t: Array,
+                n_slots: int) -> Optional[Array]:
+    """(S,) bool mask of slots silently frozen at global step ``t``
+    (None when the plan never freezes — keeps the fault-free trace
+    byte-identical)."""
+    if plan is None or not plan.freeze_steps:
+        return None
+    return _step_hit(t, plan.freeze_steps) \
+        & _slot_mask(plan.freeze_slots, n_slots)

@@ -5,13 +5,31 @@ admission into free slots, and per-request accounting (arrival / first
 token / finish timestamps).  Everything latency-critical lives in the
 compiled engine; the scheduler only runs between decode blocks, so its
 cost is amortised over M tokens per slot.
+
+Resilience layer (PR 8): every request ends in EXACTLY ONE terminal
+state — ``completed``, ``shed`` (admission control dropped it before it
+ever held a slot), ``timed_out`` (its completion deadline expired while
+decoding), or ``failed`` (a device fault or stall exhausted its retry
+budget).  Admission control is deadline-based load shedding: a bounded
+arrived-queue (``queue_cap``) plus TTFT-deadline rejection — a request
+that could no longer receive its first token in time is shed instead of
+rotting in the queue, so under overload goodput degrades gracefully and
+the TTFT of what IS served stays bounded.  Transient device faults
+requeue the request through a retry lane with backoff and a bounded
+attempt budget.
 """
 from __future__ import annotations
 
 import math
 import random
+from collections import Counter, deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
+
+#: The four terminal request states.  ``state_counts`` tallies them and
+#: the chaos gate in ``benchmarks/check_smoke.py`` asserts they account
+#: for every request.
+TERMINAL_STATES = ("completed", "shed", "timed_out", "failed")
 
 
 @dataclass(frozen=True)
@@ -20,29 +38,56 @@ class Request:
     start (0 = already queued); ``max_new`` overrides the engine default
     (total generated tokens, including the prefill-sampled first one);
     ``extras`` carries modality inputs (``image_embeds`` / ``enc_embeds``)
-    for VLM / audio families."""
+    for VLM / audio families.  ``ttft_deadline_s`` / ``deadline_s`` are
+    per-request SLOs RELATIVE to arrival (None = the engine-level
+    default): miss the first-token deadline while still queued and the
+    request is shed; miss the completion deadline mid-decode and the
+    watchdog cancels the slot."""
     rid: int
     tokens: Tuple[int, ...]
     arrival_s: float = 0.0
     max_new: Optional[int] = None
     extras: tuple = ()                 # tuple of (name, array) pairs
+    ttft_deadline_s: Optional[float] = None
+    deadline_s: Optional[float] = None
 
 
 @dataclass
 class RequestRecord:
-    """Per-request serving telemetry, filled in by the engine."""
+    """Per-request serving telemetry, filled in by the engine.
+
+    ``state`` walks queued -> running -> one of ``TERMINAL_STATES``
+    (a retried request goes back to queued); ``attempts`` counts
+    admissions, ``faults`` counts device-guard trips attributed to this
+    request."""
     request: Request
     tokens: List[int] = field(default_factory=list)
     admitted_s: Optional[float] = None
     first_token_s: Optional[float] = None
     finished_s: Optional[float] = None
     slot: Optional[int] = None
+    state: str = "queued"
+    attempts: int = 0
+    faults: int = 0
 
     @property
     def ttft_s(self) -> Optional[float]:
         if self.first_token_s is None:
             return None
         return self.first_token_s - self.request.arrival_s
+
+    @property
+    def retries(self) -> int:
+        return max(0, self.attempts - 1)
+
+
+def state_counts(records: Dict[int, "RequestRecord"]) -> Dict[str, int]:
+    """Terminal-state tally over a record dict (non-terminal states
+    appear under their own name, so an unfinished run is visible)."""
+    c = Counter(r.state for r in records.values())
+    out = {s: c.pop(s, 0) for s in TERMINAL_STATES}
+    out.update(c)
+    return out
 
 
 def poisson_requests(n: int, rate: float, *, prompt_len: int,
@@ -65,41 +110,236 @@ def poisson_requests(n: int, rate: float, *, prompt_len: int,
 
 
 class FifoScheduler:
-    """Arrival-ordered FIFO queue over a fixed slot set."""
+    """Arrival-ordered FIFO queue over a fixed slot set, with a retry
+    lane and deadline-based shedding.
 
-    def __init__(self, requests: List[Request], n_slots: int):
-        self.pending: List[Request] = sorted(requests,
-                                             key=lambda r: r.arrival_s)
+    Admission order: ready retries first (they already waited once),
+    then arrivals in order.  The retry lane assumes a single constant
+    backoff per run (the engine's ``retry_backoff_s``), so its ready
+    times are monotone in append order and the head is always the
+    earliest.
+    """
+
+    def __init__(self, requests: List[Request], n_slots: int, *,
+                 queue_cap: Optional[int] = None,
+                 ttft_deadline_s: Optional[float] = None,
+                 deadline_s: Optional[float] = None):
+        dupes = [rid for rid, n in
+                 Counter(r.rid for r in requests).items() if n > 1]
+        if dupes:
+            raise ValueError(f"duplicate request rids {sorted(dupes)}: "
+                             f"records would silently overwrite each other")
+        self.pending: Deque[Request] = deque(
+            sorted(requests, key=lambda r: r.arrival_s))
+        self.retry_q: Deque[Tuple[float, Request]] = deque()
         self.records: Dict[int, RequestRecord] = {
             r.rid: RequestRecord(request=r) for r in requests}
-        self.free_slots: List[int] = list(range(n_slots))
+        self.free_slots: Deque[int] = deque(range(n_slots))
         self.slot_rid: List[Optional[int]] = [None] * n_slots
+        self.queue_cap = queue_cap
+        self.default_ttft_deadline_s = ttft_deadline_s
+        self.default_deadline_s = deadline_s
+
+    # ------------------------------------------------------------ SLOs
+    def _ttft_deadline(self, req: Request) -> float:
+        rel = req.ttft_deadline_s if req.ttft_deadline_s is not None \
+            else self.default_ttft_deadline_s
+        return math.inf if rel is None else req.arrival_s + rel
+
+    def abs_deadline(self, rid: int) -> float:
+        """Absolute completion deadline for an admitted request (inf if
+        no deadline applies)."""
+        req = self.records[rid].request
+        rel = req.deadline_s if req.deadline_s is not None \
+            else self.default_deadline_s
+        return math.inf if rel is None else req.arrival_s + rel
+
+    def shed_expired(self, now_s: float) -> int:
+        """Admission control, run at every block boundary: drop queued
+        requests whose TTFT deadline has already passed (they can no
+        longer be served in time) and, with a ``queue_cap``, the newest
+        arrived requests beyond the cap (bounded queue: reject rather
+        than build unbounded latency).  The cap applies to requests that
+        will actually WAIT — arrivals a currently-free slot can admit
+        this same boundary don't count against it.  Returns the number
+        shed."""
+        shed = 0
+        keep: Deque[Request] = deque()
+        arrived: List[Request] = []
+        for req in self.pending:
+            if now_s > self._ttft_deadline(req):
+                self._mark_shed(req, now_s)
+                shed += 1
+            elif req.arrival_s <= now_s:
+                arrived.append(req)
+                keep.append(req)
+            else:
+                keep.append(req)
+        cap = (None if self.queue_cap is None
+               else self.queue_cap + len(self.free_slots))
+        if cap is not None and len(arrived) > cap:
+            for req in arrived[cap:]:
+                keep.remove(req)
+                self._mark_shed(req, now_s)
+                shed += 1
+        self.pending = keep
+        return shed
+
+    def _mark_shed(self, req: Request, now_s: float) -> None:
+        rec = self.records[req.rid]
+        rec.state = "shed"
+        rec.finished_s = now_s
+
+    # ------------------------------------------------------- admission
+    def next_ready(self) -> Optional[float]:
+        """Earliest instant at which some queued request becomes
+        admissible (None when nothing is queued)."""
+        times = []
+        if self.pending:
+            times.append(self.pending[0].arrival_s)
+        if self.retry_q:
+            times.append(self.retry_q[0][0])
+        return min(times) if times else None
 
     def next_arrival(self) -> Optional[float]:
         return self.pending[0].arrival_s if self.pending else None
 
     def admissible(self, now_s: float) -> bool:
-        return bool(self.pending and self.free_slots
-                    and self.pending[0].arrival_s <= now_s)
+        if not self.free_slots:
+            return False
+        if self.retry_q and self.retry_q[0][0] <= now_s:
+            return True
+        return bool(self.pending and self.pending[0].arrival_s <= now_s)
 
     def pop(self, now_s: float) -> Tuple[Request, int]:
         """Claim (request, slot) for admission; caller must be
         ``admissible``."""
-        req = self.pending.pop(0)
-        slot = self.free_slots.pop(0)
+        if self.retry_q and self.retry_q[0][0] <= now_s:
+            _, req = self.retry_q.popleft()
+        else:
+            req = self.pending.popleft()
+        slot = self.free_slots.popleft()
         rec = self.records[req.rid]
         rec.admitted_s = now_s
         rec.slot = slot
+        rec.state = "running"
+        rec.attempts += 1
         self.slot_rid[slot] = req.rid
         return req, slot
 
-    def release(self, slot: int, now_s: float) -> None:
+    # ------------------------------------------------------ slot exits
+    def release(self, slot: int, now_s: float,
+                state: str = "completed") -> None:
+        """Return a slot to the free list with its request in terminal
+        ``state``.  Releasing an already-free slot raises — double
+        release would put the slot in the free list twice and hand one
+        physical slot to two requests."""
         rid = self.slot_rid[slot]
-        if rid is not None:
-            self.records[rid].finished_s = now_s
+        if rid is None:
+            raise ValueError(f"release of slot {slot}, which is already "
+                             f"free — double release would duplicate it "
+                             f"in the free list")
+        if state not in TERMINAL_STATES:
+            raise ValueError(f"release state {state!r} not one of "
+                             f"{TERMINAL_STATES}")
+        rec = self.records[rid]
+        rec.finished_s = now_s
+        rec.state = state
         self.slot_rid[slot] = None
         self.free_slots.append(slot)
 
+    def requeue(self, slot: int, ready_s: float) -> None:
+        """Reclaim a faulted/stuck slot and send its request back
+        through the retry lane: tokens from the failed attempt are
+        discarded (the retry re-prefills from the prompt) and the
+        request becomes admissible again at ``ready_s``."""
+        rid = self.slot_rid[slot]
+        if rid is None:
+            raise ValueError(f"requeue of slot {slot}, which is already "
+                             f"free")
+        rec = self.records[rid]
+        rec.tokens = []
+        rec.first_token_s = None
+        rec.slot = None
+        rec.state = "queued"
+        self.slot_rid[slot] = None
+        self.free_slots.append(slot)
+        self.retry_q.append((ready_s, rec.request))
+
     @property
     def done(self) -> bool:
-        return not self.pending and all(r is None for r in self.slot_rid)
+        return (not self.pending and not self.retry_q
+                and all(r is None for r in self.slot_rid))
+
+    # ------------------------------------------------ snapshot support
+    def to_meta(self) -> dict:
+        """JSON-serialisable scheduler state for the serve snapshot.
+        Modality ``extras`` are device arrays and cannot ride the JSON
+        header, so snapshotting is refused while a request that might
+        still need re-prefill (queued, retrying, or running) carries
+        extras."""
+        for req in ([r for r in self.pending]
+                    + [r for _, r in self.retry_q]
+                    + [self.records[rid].request
+                       for rid in self.slot_rid if rid is not None]):
+            if req.extras:
+                raise ValueError(
+                    f"request {req.rid} carries modality extras and is "
+                    f"not terminal: serve snapshots cannot serialise "
+                    f"extras arrays")
+
+        def req_meta(r: Request) -> dict:
+            return {"rid": r.rid, "tokens": list(r.tokens),
+                    "arrival_s": r.arrival_s, "max_new": r.max_new,
+                    "ttft_deadline_s": r.ttft_deadline_s,
+                    "deadline_s": r.deadline_s}
+
+        return {
+            "requests": [req_meta(rec.request)
+                         for rec in self.records.values()],
+            "records": {str(rid): {
+                "tokens": [int(t) for t in rec.tokens],
+                "admitted_s": rec.admitted_s,
+                "first_token_s": rec.first_token_s,
+                "finished_s": rec.finished_s,
+                "slot": rec.slot, "state": rec.state,
+                "attempts": rec.attempts, "faults": rec.faults,
+            } for rid, rec in self.records.items()},
+            "pending": [r.rid for r in self.pending],
+            "retry_q": [[ready, r.rid] for ready, r in self.retry_q],
+            "free_slots": list(self.free_slots),
+            "slot_rid": list(self.slot_rid),
+            "queue_cap": self.queue_cap,
+            "ttft_deadline_s": self.default_ttft_deadline_s,
+            "deadline_s": self.default_deadline_s,
+        }
+
+    @classmethod
+    def from_meta(cls, meta: dict) -> "FifoScheduler":
+        reqs = {m["rid"]: Request(rid=m["rid"], tokens=tuple(m["tokens"]),
+                                  arrival_s=m["arrival_s"],
+                                  max_new=m["max_new"],
+                                  ttft_deadline_s=m["ttft_deadline_s"],
+                                  deadline_s=m["deadline_s"])
+                for m in meta["requests"]}
+        sched = cls(list(reqs.values()), len(meta["slot_rid"]),
+                    queue_cap=meta["queue_cap"],
+                    ttft_deadline_s=meta["ttft_deadline_s"],
+                    deadline_s=meta["deadline_s"])
+        for rid_s, rm in meta["records"].items():
+            rec = sched.records[int(rid_s)]
+            rec.tokens = list(rm["tokens"])
+            rec.admitted_s = rm["admitted_s"]
+            rec.first_token_s = rm["first_token_s"]
+            rec.finished_s = rm["finished_s"]
+            rec.slot = rm["slot"]
+            rec.state = rm["state"]
+            rec.attempts = rm["attempts"]
+            rec.faults = rm["faults"]
+        sched.pending = deque(reqs[rid] for rid in meta["pending"])
+        sched.retry_q = deque((ready, reqs[rid])
+                              for ready, rid in meta["retry_q"])
+        sched.free_slots = deque(meta["free_slots"])
+        sched.slot_rid = [rid if rid is None else int(rid)
+                          for rid in meta["slot_rid"]]
+        return sched

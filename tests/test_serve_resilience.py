@@ -1,0 +1,393 @@
+"""Resilient-serving tests: SLO shedding, deadlines, on-device output
+guards, the chaos harness, and crash-recoverable decode state.
+
+The load-bearing properties:
+
+  - EXACTLY ONE TERMINAL STATE: under any fault schedule every request
+    ends completed / shed / timed_out / failed, and the counts sum to
+    the stream size;
+  - NO GARBAGE: a token derived from poisoned logits is never emitted —
+    every emitted stream is a PREFIX of the fault-free (greedy,
+    deterministic) run's stream, and completed requests match it
+    exactly;
+  - BIT-IDENTICAL RESUME: kill-and-resume through the serve snapshot
+    continues already-admitted slots exactly (tested at temperature > 0
+    so the carried RNG key does real work).
+"""
+import dataclasses
+import itertools
+
+import jax
+import pytest
+
+from repro.checkpoint import CheckpointError, save_checkpoint
+from repro.configs import get_config, reduced
+from repro.models import transformer as T
+from repro.serve import (FaultPlan, FifoScheduler, Request, ServeConfig,
+                         ServeEngine, SimulatedCrash, poisson_requests,
+                         state_counts)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tiny_cfg():
+    return get_config("fedmm-small").with_(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = _tiny_cfg()
+    return cfg, T.init_params(KEY, cfg)
+
+
+def _reqs(cfg, n, seed=3, prompt_len=8):
+    return poisson_requests(n, 0.0, prompt_len=prompt_len,
+                            vocab_size=cfg.vocab_size, seed=seed)
+
+
+def _assert_accounting(recs, n):
+    counts = state_counts(recs)
+    assert sum(counts.get(s, 0) for s in
+               ("completed", "shed", "timed_out", "failed")) == n, counts
+    return counts
+
+
+# ======================================================== scheduler
+class TestSchedulerEdgeCases:
+    def test_duplicate_rid_raises(self):
+        reqs = [Request(rid=1, tokens=(1, 2)), Request(rid=1, tokens=(3,))]
+        with pytest.raises(ValueError, match="duplicate"):
+            FifoScheduler(reqs, 2)
+
+    def test_zero_slots_never_admissible(self):
+        sched = FifoScheduler([Request(rid=0, tokens=(1,))], 0)
+        assert not sched.admissible(0.0)
+        assert not sched.done          # queued work, nowhere to run it
+        assert sched.next_ready() == 0.0
+
+    def test_out_of_order_arrivals_admit_in_arrival_order(self):
+        reqs = [Request(rid=0, tokens=(1,), arrival_s=0.5),
+                Request(rid=1, tokens=(2,), arrival_s=0.0),
+                Request(rid=2, tokens=(3,), arrival_s=0.25)]
+        sched = FifoScheduler(reqs, 3)
+        order = [sched.pop(1.0)[0].rid for _ in range(3)]
+        assert order == [1, 2, 0]
+
+    def test_release_already_free_slot_raises(self):
+        sched = FifoScheduler([Request(rid=0, tokens=(1,))], 2)
+        with pytest.raises(ValueError, match="already.*free"):
+            sched.release(0, 0.0)
+        req, slot = sched.pop(0.0)
+        sched.release(slot, 1.0)
+        with pytest.raises(ValueError, match="already.*free"):
+            sched.release(slot, 2.0)     # double release = duplicated slot
+        assert len(sched.free_slots) == 2
+        with pytest.raises(ValueError, match="already.*free"):
+            sched.requeue(slot, 2.0)
+
+    def test_done_with_never_admitted_requests(self):
+        reqs = [Request(rid=i, tokens=(1,), ttft_deadline_s=0.1)
+                for i in range(3)]
+        sched = FifoScheduler(reqs, 2)
+        assert not sched.done
+        assert sched.shed_expired(5.0) == 3    # all past their deadline
+        assert sched.done
+        assert all(r.state == "shed" for r in sched.records.values())
+
+    def test_queue_cap_sheds_newest_arrivals(self):
+        reqs = [Request(rid=i, tokens=(1,), arrival_s=0.01 * i)
+                for i in range(5)]
+        sched = FifoScheduler(reqs, 1, queue_cap=2)
+        sched.pop(0.0)                          # rid 0 takes the slot
+        assert sched.shed_expired(1.0) == 2     # cap bounds the WAITERS
+        kept = [r.rid for r in sched.pending]
+        assert kept == [1, 2]                   # oldest stay
+        counts = state_counts(sched.records)
+        assert counts["shed"] == 2
+
+    def test_retry_lane_admits_before_pending(self):
+        reqs = [Request(rid=i, tokens=(1,)) for i in range(3)]
+        sched = FifoScheduler(reqs, 2)
+        req, slot = sched.pop(0.0)
+        assert req.rid == 0
+        sched.requeue(slot, ready_s=1.0)
+        # backoff not elapsed: the retry waits, but arrivals still flow
+        req2, _ = sched.pop(0.5)
+        assert req2.rid == 1
+        # backoff elapsed: the ready retry (rid 0) beats pending rid 2
+        req3, _ = sched.pop(2.0)
+        assert req3.rid == 0 and sched.records[0].attempts == 2
+        assert sched.next_ready() == 0.0        # rid 2 still queued
+
+
+# ================================================== engine guards/SLOs
+def test_engine_rejects_zero_slots(tiny):
+    cfg, params = tiny
+    with pytest.raises(ValueError, match="n_slots"):
+        ServeEngine(params, cfg, ServeConfig(n_slots=0))
+
+
+def test_overload_sheds_and_completes_rest(tiny):
+    """Bounded queue + TTFT deadline: overload degrades to shed requests
+    and bounded queueing, never an error, and completed requests still
+    match the fault-free oracle."""
+    cfg, params = tiny
+    scfg = ServeConfig(n_slots=2, cache_len=64, block_steps=4,
+                       max_new_tokens=24, queue_cap=1,
+                       ttft_deadline_s=1e-4)
+    reqs = _reqs(cfg, 6)
+    clean = ServeEngine(params, cfg, dataclasses.replace(
+        scfg, queue_cap=None, ttft_deadline_s=None)).serve(reqs)
+    recs = ServeEngine(params, cfg, scfg).serve(reqs)
+    counts = _assert_accounting(recs, 6)
+    assert counts["shed"] >= 1
+    assert counts["completed"] >= 2    # the first admissions always run
+    for r in reqs:
+        if recs[r.rid].state == "completed":
+            assert recs[r.rid].tokens == clean[r.rid].tokens
+        if recs[r.rid].state == "shed":
+            assert recs[r.rid].tokens == []
+            assert recs[r.rid].attempts == 0
+
+
+def test_completion_deadline_times_out_slot(tiny):
+    """A host delay pushes a request past its completion deadline; the
+    watchdog cancels the slot at the next block boundary, the slot is
+    reclaimed, and the partial stream is a prefix of the clean run."""
+    cfg, params = tiny
+    scfg = ServeConfig(n_slots=1, cache_len=64, block_steps=4,
+                       max_new_tokens=24, deadline_s=0.05)
+    reqs = _reqs(cfg, 2)
+    clean = ServeEngine(params, cfg, dataclasses.replace(
+        scfg, deadline_s=None)).serve(reqs)
+    plan = FaultPlan(delay_blocks=(1, 7), delay_s=0.2)
+    eng = ServeEngine(params, cfg, scfg)
+    recs = eng.serve(reqs, fault_plan=plan)
+    counts = _assert_accounting(recs, 2)
+    assert counts["timed_out"] == 2       # both requests hit the delay
+    for r in reqs:
+        got = recs[r.rid].tokens
+        assert got == clean[r.rid].tokens[:len(got)]
+        assert 0 < len(got) < 24          # partial: started, then cut
+
+
+def test_nan_guard_retries_to_clean_tokens(tiny):
+    """NaN-poisoned decode steps trip the on-device guard; the poisoned
+    token is never emitted, the request retries, and every completed
+    stream is bit-identical to the fault-free run."""
+    cfg, params = tiny
+    scfg = ServeConfig(n_slots=3, cache_len=64, block_steps=4,
+                       max_new_tokens=10, max_attempts=3)
+    reqs = _reqs(cfg, 5, seed=11)
+    clean = ServeEngine(params, cfg, scfg).serve(reqs)
+    plan = FaultPlan(nan_steps=(3, 6), nan_slots=(0, 1))
+    eng = ServeEngine(params, cfg, scfg)
+    recs = eng.serve(reqs, fault_plan=plan)
+    counts = _assert_accounting(recs, 5)
+    assert counts["completed"] == 5
+    assert eng.stats["faults_detected"] >= 1
+    assert sum(recs[r.rid].retries for r in reqs) >= 1
+    for r in reqs:
+        assert recs[r.rid].tokens == clean[r.rid].tokens, r.rid
+
+
+def test_poison_every_step_exhausts_retries_to_failed(tiny):
+    """With every decode step poisoned the retry budget runs out and the
+    request lands in the terminal ``failed`` state — never an emitted
+    garbage token, never a livelock."""
+    cfg, params = tiny
+    scfg = ServeConfig(n_slots=1, cache_len=64, block_steps=4,
+                       max_new_tokens=8, max_attempts=2)
+    reqs = _reqs(cfg, 2, seed=5)
+    plan = FaultPlan(nan_steps=tuple(range(512)))
+    eng = ServeEngine(params, cfg, scfg)
+    recs = eng.serve(reqs, fault_plan=plan)
+    counts = _assert_accounting(recs, 2)
+    assert counts["failed"] == 2
+    for r in reqs:
+        assert recs[r.rid].attempts == 2
+        # only the (unpoisoned) prefill token ever made it out
+        assert len(recs[r.rid].tokens) <= 1
+
+
+def test_repetition_guard_catches_forced_token(tiny):
+    """A finite-logit fault that forces one token to repeat slips past
+    the non-finite guard but trips the runaway-repetition guard; the
+    retry (past the forced window) completes clean."""
+    cfg, params = tiny
+    base = ServeConfig(n_slots=2, cache_len=64, block_steps=4,
+                       max_new_tokens=40, max_attempts=3)
+    reqs = _reqs(cfg, 2, seed=7)
+    probe = ServeEngine(params, cfg, base).serve(reqs)
+    longest = max(
+        max(sum(1 for _ in g) for _, g in itertools.groupby(
+            probe[r.rid].tokens)) for r in reqs)
+    max_rep = longest + 2        # above any repeat the clean run emits
+    if max_rep > 32:
+        pytest.skip("degenerate model: clean run is one long repeat")
+    # budget so the guard can trip (step 1 + max_rep) before exhaustion
+    scfg = dataclasses.replace(base, max_repeat=max_rep,
+                               max_new_tokens=max_rep + 6)
+    clean = {rid: dataclasses.replace(
+        rec, tokens=rec.tokens[:max_rep + 6])
+        for rid, rec in probe.items()}
+    # window ends AT the trip step (1 + max_rep): long enough to drive
+    # rep_run over the limit, gone by the time the retry resumes
+    plan = FaultPlan(force_steps=tuple(range(1, max_rep + 2)),
+                     force_token=17)
+    eng = ServeEngine(params, cfg, scfg)
+    recs = eng.serve(reqs, fault_plan=plan)
+    counts = _assert_accounting(recs, 2)
+    assert eng.stats["faults_detected"] >= 1
+    assert counts["completed"] == 2
+    for r in reqs:
+        assert recs[r.rid].tokens == clean[r.rid].tokens, r.rid
+        assert recs[r.rid].retries >= 1
+
+
+def test_stall_watchdog_reclaims_frozen_slot(tiny):
+    """A silently-frozen slot (no tokens, not stopped) is reclaimed by
+    the zero-progress watchdog and retried to a clean completion; with
+    the watchdog off the freeze just delays the same result."""
+    cfg, params = tiny
+    base = ServeConfig(n_slots=2, cache_len=64, block_steps=4,
+                       max_new_tokens=12, max_attempts=3)
+    reqs = _reqs(cfg, 2, seed=9)
+    clean = ServeEngine(params, cfg, base).serve(reqs)
+    plan = FaultPlan(freeze_steps=tuple(range(4, 12)), freeze_slots=(0,))
+    for stall_blocks in (2, 0):
+        scfg = dataclasses.replace(base, stall_blocks=stall_blocks)
+        eng = ServeEngine(params, cfg, scfg)
+        recs = eng.serve(reqs, fault_plan=plan)
+        counts = _assert_accounting(recs, 2)
+        assert counts["completed"] == 2
+        for r in reqs:
+            assert recs[r.rid].tokens == clean[r.rid].tokens, \
+                (stall_blocks, r.rid)
+        if stall_blocks:
+            assert eng.stats["stalls_detected"] >= 1
+
+
+@pytest.mark.parametrize("arch", ["falcon-mamba-7b", "recurrentgemma-9b"])
+def test_freeze_resumes_bit_identically_recurrent_state(arch):
+    """A chaos-frozen slot that RESUMES (span shorter than the stall
+    watchdog, or watchdog off) must continue bit-identically — which
+    requires ``decode_step_slots`` to hold SSM / RG-LRU recurrent state
+    for masked slots, not just the cache position (attention families
+    get this for free from position gating; recurrent updates are not
+    idempotent)."""
+    cfg = reduced(get_config(arch))
+    params = T.init_params(KEY, cfg)
+    scfg = ServeConfig(n_slots=2, cache_len=96, block_steps=4,
+                       max_new_tokens=12)
+    reqs = _reqs(cfg, 2, seed=19)
+    clean = ServeEngine(params, cfg, scfg).serve(reqs)
+    plan = FaultPlan(freeze_steps=(3, 4, 5), freeze_slots=(0,))
+    recs = ServeEngine(params, cfg, scfg).serve(reqs, fault_plan=plan)
+    assert _assert_accounting(recs, 2)["completed"] == 2
+    for r in reqs:
+        assert recs[r.rid].tokens == clean[r.rid].tokens, r.rid
+
+
+# ===================================================== snapshot/resume
+def test_crash_resume_bit_identical_at_temperature(tiny, tmp_path):
+    """Kill-and-resume through the serve snapshot: the resumed engine
+    completes every unfinished request with tokens bit-identical to an
+    uninterrupted run — at temperature > 0, so the carried RNG key (not
+    greedy determinism) is what makes it exact."""
+    cfg, params = tiny
+    scfg = ServeConfig(n_slots=3, cache_len=64, block_steps=4,
+                       max_new_tokens=12, temperature=0.7, seed=42)
+    reqs = _reqs(cfg, 5, seed=13)
+    want = ServeEngine(params, cfg, scfg).serve(reqs)
+    snap = str(tmp_path / "serve.npz")
+    plan = FaultPlan(crash_after_block=1)   # mid-decode for all slots
+    eng = ServeEngine(params, cfg, scfg)
+    with pytest.raises(SimulatedCrash):
+        eng.serve(reqs, fault_plan=plan, snapshot_path=snap,
+                  snapshot_every_blocks=1)
+    partial = {rid: list(rec.tokens)
+               for rid, rec in eng._sched.records.items()}
+    assert any(rec.state == "running"
+               for rec in eng._sched.records.values())
+    eng2 = ServeEngine.resume(snap, params, cfg)
+    recs = eng2.resume_serve()
+    counts = _assert_accounting(recs, 5)
+    assert counts["completed"] == 5
+    for r in reqs:
+        assert recs[r.rid].tokens == want[r.rid].tokens, r.rid
+        # the crashed attempt's stream was a prefix of the final one
+        got = [int(t) for t in partial[r.rid]]
+        assert recs[r.rid].tokens[:len(got)] == got, r.rid
+
+
+def test_resume_snapshot_taken_before_crash_block(tiny, tmp_path):
+    """Snapshot cadence sparser than the crash point: the resumed run
+    REPLAYS the lost block from the snapshot's device state and still
+    matches the uninterrupted run exactly."""
+    cfg, params = tiny
+    scfg = ServeConfig(n_slots=2, cache_len=64, block_steps=4,
+                       max_new_tokens=16, seed=1)
+    reqs = _reqs(cfg, 3, seed=17)
+    want = ServeEngine(params, cfg, scfg).serve(reqs)
+    snap = str(tmp_path / "serve.npz")
+    eng = ServeEngine(params, cfg, scfg)
+    with pytest.raises(SimulatedCrash):
+        eng.serve(reqs, fault_plan=FaultPlan(crash_after_block=2),
+                  snapshot_path=snap, snapshot_every_blocks=2)
+    eng2 = ServeEngine.resume(snap, params, cfg)
+    recs = eng2.resume_serve()
+    assert _assert_accounting(recs, 3)["completed"] == 3
+    for r in reqs:
+        assert recs[r.rid].tokens == want[r.rid].tokens, r.rid
+
+
+def test_resume_rejects_corrupt_and_mismatched_snapshots(tiny, tmp_path):
+    cfg, params = tiny
+    scfg = ServeConfig(n_slots=2, cache_len=64, block_steps=4,
+                       max_new_tokens=8)
+    snap = str(tmp_path / "serve.npz")
+    eng = ServeEngine(params, cfg, scfg)
+    with pytest.raises(SimulatedCrash):
+        eng.serve(_reqs(cfg, 3), fault_plan=FaultPlan(crash_after_block=1),
+                  snapshot_path=snap, snapshot_every_blocks=1)
+    # truncation -> CheckpointError with the path in the message
+    with open(snap, "rb") as fh:
+        blob = fh.read()
+    trunc = str(tmp_path / "trunc.npz")
+    with open(trunc, "wb") as fh:
+        fh.write(blob[:len(blob) // 3])
+    with pytest.raises(CheckpointError, match="trunc"):
+        ServeEngine.resume(trunc, params, cfg)
+    # a non-serve checkpoint -> ValueError, not a crash later
+    other = str(tmp_path / "other.npz")
+    save_checkpoint(other, {"x": jax.numpy.zeros((2,))}, meta={"a": 1})
+    with pytest.raises(ValueError, match="not a serve snapshot"):
+        ServeEngine.resume(other, params, cfg)
+    # wrong model family -> ValueError before any device work
+    ssm = get_config("falcon-mamba-7b")
+    with pytest.raises(ValueError, match="family|model"):
+        ServeEngine.resume(snap, params, ssm)
+
+
+def test_chaos_composite_accounting(tiny):
+    """The full chaos schedule at once — NaN poison, a freeze, host
+    delays — over a stream with deadlines: every request ends in exactly
+    one terminal state and no garbage token is ever emitted."""
+    cfg, params = tiny
+    scfg = ServeConfig(n_slots=3, cache_len=64, block_steps=4,
+                       max_new_tokens=12, max_attempts=2,
+                       stall_blocks=2, deadline_s=30.0)
+    reqs = _reqs(cfg, 8, seed=23)
+    clean = ServeEngine(params, cfg, dataclasses.replace(
+        scfg, deadline_s=None)).serve(reqs)
+    plan = FaultPlan(nan_steps=(5, 9), nan_slots=(0,),
+                     freeze_steps=tuple(range(8, 16)), freeze_slots=(1,),
+                     delay_blocks=(2,), delay_s=0.01)
+    recs = ServeEngine(params, cfg, scfg).serve(reqs, fault_plan=plan)
+    _assert_accounting(recs, 8)
+    for r in reqs:
+        got = recs[r.rid].tokens
+        assert got == clean[r.rid].tokens[:len(got)], r.rid
